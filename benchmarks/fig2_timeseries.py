@@ -1,0 +1,60 @@
+"""Paper Fig. 2: per-time-step cost over the record — convergence degrades
+near the strong-motion window (more solver iterations), recovers after.
+
+Emits CSV (step, input_amp, cg_iterations) from a Kobe-like amplitude-
+modulated input at test scale; the iteration count is the hardware-
+independent proxy the figure tracks.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.fem import meshgen, methods
+
+
+def kobe_like_wave(nt: int, dt: float, peak: float = 2.0) -> np.ndarray:
+    """Amplitude-modulated band-limited record: quiet → main motion → coda."""
+    rng = np.random.default_rng(3)
+    t = np.arange(nt) * dt
+    env = np.exp(-0.5 * ((t - 0.45 * nt * dt) / (0.15 * nt * dt)) ** 2)
+    base = rng.uniform(-1, 1, size=(nt, 3)) * np.array([1.0, 1.0, 0.5])
+    f = np.fft.rfftfreq(nt, dt)
+    W = np.fft.rfft(base, axis=0)
+    W[f > 2.5] = 0
+    base = np.fft.irfft(W, n=nt, axis=0)
+    return peak * env[:, None] * base
+
+
+def main(nt: int = 16, n: int = 3):
+    """Fig-2 signature at test scale: stronger motion → springs yield →
+    worse conditioning → more CG iterations.  The per-step modulation needs
+    production-scale strains, so we sweep the record's peak amplitude and
+    report per-step CSVs + the monotone iters(amplitude) trend."""
+    mesh = meshgen.generate(n, n, n, pad_elems_to=8)
+    cfg = methods.SeismicConfig(dt=0.01, tol=1e-7, maxiter=800, npart=4, nspring=12)
+    peaks = [0.5, 8.0, 40.0]
+    max_iters = []
+    iters = amp = None
+    for peak in peaks:
+        wave = kobe_like_wave(nt, cfg.dt, peak=peak)
+        out = methods.run(mesh, cfg, wave, method="baseline1")
+        iters = np.asarray(out["iters"])
+        amp = np.abs(wave).max(axis=1)
+        max_iters.append(int(iters[1:].max()))
+        print(f"# peak {peak:5.1f} m/s: CG iters per step = {iters.tolist()}")
+    print("peak_amp,max_cg_iterations")
+    for p, mi in zip(peaks, max_iters):
+        print(f"{p},{mi}")
+    grows = max_iters[0] <= max_iters[1] <= max_iters[2] and max_iters[2] > max_iters[0]
+    print(f"# iterations grow with motion intensity: {grows} "
+          f"({max_iters[0]} → {max_iters[2]})")
+    return iters, amp
+
+
+if __name__ == "__main__":
+    main()

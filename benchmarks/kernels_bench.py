@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: jitted oracle wall time on this CPU (the Pallas
+kernels execute via interpret mode here — TPU timing is dry-run territory),
+plus the analytic per-call FLOP counts used by the roofline."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fem import meshgen, multispring as ms, quadrature as quad
+from repro.kernels.ebe_matvec import ebe_element_matvec_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.layers import flash_attention_jnp
+
+
+def _bench(fn, *args, reps=5):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def main():
+    rows = []
+    # EBE element product
+    mesh = meshgen.generate(3, 3, 3, pad_elems_to=8)
+    E = mesh.n_elem
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(E, 10, 3)), jnp.float32)
+    D = jnp.asarray(np.tile(np.eye(6), (E, quad.NPOINT, 1, 1)), jnp.float32)
+    Ji = jnp.asarray(mesh.Jinv, jnp.float32)
+    wd = jnp.asarray(mesh.wdet, jnp.float32)
+    f = jax.jit(lambda *a: ebe_element_matvec_ref(*a))
+    us = _bench(f, u, D, Ji, wd, None)
+    flops = E * quad.NPOINT * (2 * 90 + 2 * 90 + 72 + 2 * 90)
+    rows.append(("ebe_matvec_ref", us, f"{flops/us*1e-3:.2f}GFLOP/s_equiv"))
+
+    # multispring update
+    P, S = E * quad.NPOINT, 30
+    params = ms.material_params_for_mesh(mesh, jnp.float32)
+    n, w = ms.spring_directions(S)
+    st = ms.init_state(P, S, jnp.float32)
+    eps = jnp.asarray(rng.normal(scale=1e-4, size=(P, 6)), jnp.float32)
+    g = jax.jit(lambda e, s: ms.update(e, s, params, jnp.asarray(n, jnp.float32), jnp.asarray(w, jnp.float32)))
+    us = _bench(g, eps, st)
+    rows.append(("multispring_ref", us, f"{P*S} springs"))
+
+    # flash attention (jnp scan impl — the trainable path)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    h = jax.jit(lambda q, k: flash_attention_jnp(q, k, k, causal=True, block_q=128, block_k=128))
+    us = _bench(h, q, k)
+    fl = 4 * 1 * 4 * 256 * 256 * 64
+    rows.append(("flash_attention_jnp", us, f"{fl/us*1e-3:.2f}GFLOP/s_equiv"))
+
+    for name, us, extra in rows:
+        print(f"{name},{us:.1f},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Roofline analysis per (arch × shape × mesh) from the dry-run artifacts.
+
+Terms (TPU v5e targets): compute = FLOPs/(chips·197 TF/s bf16),
+memory = HBM bytes/(chips·819 GB/s), collective = per-chip collective
+payload bytes / 50 GB/s/link (the dry-run HLO is the per-chip program, so
+its trip-scaled collective bytes are already per-chip — equivalent to the
+global-bytes/(chips·link) form).
+
+FLOP/byte accounting: XLA's ``cost_analysis`` counts ``while`` bodies once,
+so scanned layer stacks are undercounted ~L×.  We therefore use *analytic*
+counts (formulas below, cross-validated against an unrolled 2-layer
+compile in tests) and report the raw cost_analysis figure alongside.
+Collective bytes come from the stored post-SPMD HLO with loop-trip scaling
+(launch/hlo_analysis.py), as required.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BPS = 819e9       # per chip
+LINK_BPS = 50e9       # per ICI link
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    model_flops: float        # 6·N_active·D (train) / 2·N_active·D (serve)
+    hlo_flops: float          # analytic whole-step, global
+    hlo_bytes: float          # analytic HBM traffic, global
+    collective_bytes: float   # per-chip, trip-scaled, from HLO
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_ratio: float       # model_flops / hlo_flops
+    raw_cost_flops: float     # cost_analysis (scan bodies counted once)
+    temp_bytes_per_chip: float
+
+    def row(self):
+        return (
+            f"{self.arch:17s} {self.shape:11s} {self.mesh:8s} "
+            f"{self.compute_s*1e3:9.2f} {self.memory_s*1e3:9.2f} {self.collective_s*1e3:9.2f} "
+            f"{self.dominant:10s} {self.useful_ratio:6.2f} {self.temp_bytes_per_chip/2**30:7.1f}"
+        )
+
+
+def _active_params(cfg, n_params: int) -> int:
+    """Params touched per token (MoE: shared + top-k routed only)."""
+    if not cfg.n_experts:
+        return n_params
+    F = cfg.moe_d_ff or cfg.d_ff
+    L_moe = cfg.n_layers - cfg.first_dense_layers
+    per_expert = 3 * cfg.d_model * F
+    inactive = L_moe * (cfg.n_experts - cfg.top_k) * per_expert
+    return n_params - inactive
+
+
+def _attn_flops_fwd(cfg, B, S) -> float:
+    """Quadratic attention term as compiled (full S², mask-not-skip)."""
+    if cfg.family == "ssm":
+        L_attn, H, dh = 0, 0, 0
+    elif cfg.family == "hybrid":
+        L_attn = cfg.n_layers // cfg.attn_every
+        H, dh = cfg.n_heads, cfg.hd
+    else:
+        L_attn, H, dh = cfg.n_layers, cfg.n_heads, cfg.hd
+        if cfg.attn_type == "mla":
+            dh = cfg.qk_nope_dim + cfg.qk_rope_dim
+    total = 0.0
+    for i in range(L_attn):
+        w = cfg.window
+        if cfg.local_global:
+            w = (cfg.window or 4096) if i % 2 == 0 else None
+        s_eff = min(S, w) if w else S
+        total += 4.0 * B * S * s_eff * H * dh  # QKᵀ + PV
+    # SSD core for ssm/hybrid: intra-chunk ≈ attention over chunk length
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        L_ssm = cfg.n_layers if cfg.family == "ssm" else cfg.n_layers - (cfg.n_layers // cfg.attn_every)
+        Q = cfg.ssm_chunk
+        total += L_ssm * (4.0 * B * S * Q * d_inner + 4.0 * B * S * cfg.ssm_state * d_inner)
+    return total
+
+
+def analytic_counts(cfg, shape, n_params: int) -> tuple[float, float, float]:
+    """(model_flops, hlo_flops, hbm_bytes) — global, per step."""
+    B, S = shape.global_batch, shape.seq_len
+    N = n_params
+    Na = _active_params(cfg, n_params)
+    D, V = cfg.d_model, cfg.vocab_size
+    emb = V * D * (2 if cfg.tie_embeddings else 2)  # embed (+lm_head if tied)
+    Nb = max(Na - emb, 1)  # matmul-active body params
+
+    if shape.kind == "train":
+        tokens = B * S
+        model = 6.0 * Na * tokens
+        # fwd + remat-fwd + bwd = (2+2+4)·Nb·T, attention ×4, unembed ×6
+        hlo = 8.0 * Nb * tokens + 4.0 * _attn_flops_fwd(cfg, B, S) + 6.0 * B * S * D * V
+        act_bytes = 8.0 * cfg.n_layers * B * S * D * 2  # residual saves + working set
+        logits_bytes = 3.0 * 4.0 * B * S * V
+        par_bytes = 9.0 * 4.0 * N  # fwd/remat/bwd reads + grad + Adam m,v r/w
+        hbm = par_bytes + act_bytes + logits_bytes
+    elif shape.kind == "prefill":
+        tokens = B * S
+        model = 2.0 * Na * tokens
+        hlo = 2.0 * Nb * tokens + _attn_flops_fwd(cfg, B, S) + 2.0 * B * 1 * D * V
+        cache = _cache_bytes(cfg, B, S)
+        hbm = 4.0 * N + 4.0 * cfg.n_layers * B * S * D * 2 + cache
+    else:  # decode: one token
+        tokens = B
+        model = 2.0 * Na * tokens
+        hlo = 2.0 * Nb * tokens + _attn_decode_flops(cfg, B, S) + 2.0 * B * D * V
+        hbm = 4.0 * N + 2.0 * _cache_bytes(cfg, B, S)  # read + (amortized) write
+    return model, hlo, hbm
+
+
+def _cache_bytes(cfg, B, S) -> float:
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_headdim
+        return cfg.n_layers * B * (H * cfg.ssm_headdim * cfg.ssm_state + 3 * (d_inner + 2 * cfg.ssm_groups * cfg.ssm_state)) * 2.0
+    if cfg.attn_type == "mla":
+        return cfg.n_layers * B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2.0
+    total = 0.0
+    L = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = L // cfg.attn_every
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_headdim
+        total += (L - n_attn) * B * (H * cfg.ssm_headdim * cfg.ssm_state) * 2.0
+        L = n_attn
+    for i in range(L):
+        w = cfg.window
+        if cfg.local_global:
+            w = (cfg.window or 4096) if i % 2 == 0 else None
+        c = min(S, w) if w else S
+        total += 2.0 * B * cfg.n_kv_heads * c * cfg.hd * 2.0
+    return total
+
+
+def _attn_decode_flops(cfg, B, S) -> float:
+    if cfg.family == "ssm":
+        return 0.0
+    L = cfg.n_layers
+    H, dh = cfg.n_heads, cfg.hd
+    if cfg.family == "hybrid":
+        L = L // cfg.attn_every
+    if cfg.attn_type == "mla":
+        return 4.0 * B * L * cfg.n_heads * S * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+    total = 0.0
+    for i in range(L):
+        w = cfg.window
+        if cfg.local_global:
+            w = (cfg.window or 4096) if i % 2 == 0 else None
+        c = min(S, w) if w else S
+        total += 4.0 * B * H * c * dh
+    return total
+
+
+def analyze_report(path: str) -> Roofline | None:
+    with open(path) as f:
+        r = json.load(f)
+    if r["status"] != "ok":
+        return None
+    cfg = ARCHS[r["arch"]]
+    shape = SHAPES[r["shape"]]
+    chips = 512 if r["multi_pod"] else 256
+    model, hlo, hbm = analytic_counts(cfg, shape, r["n_params"])
+    coll_by_kind = r.get("collective_bytes", {})
+    gz = path.replace(".json", ".hlo.gz")
+    if os.path.exists(gz):  # always re-parse: analysis evolves after the sweep
+        import gzip
+
+        from repro.launch.hlo_analysis import collective_bytes as _cb
+
+        with gzip.open(gz, "rt") as f:
+            coll_by_kind = _cb(f.read())
+    coll = sum(coll_by_kind.values())
+    compute_s = hlo / (chips * PEAK_FLOPS)
+    memory_s = hbm / (chips * HBM_BPS)
+    collective_s = coll / LINK_BPS
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    return Roofline(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=chips,
+        model_flops=model, hlo_flops=hlo, hlo_bytes=hbm, collective_bytes=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dom, useful_ratio=model / max(hlo, 1.0),
+        raw_cost_flops=r.get("flops", 0.0),
+        temp_bytes_per_chip=r["memory"]["temp_bytes"],
+    )
+
+
+def all_rooflines() -> list[Roofline]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        rl = analyze_report(path)
+        if rl:
+            out.append(rl)
+    return out
+
+
+def main():
+    rows = all_rooflines()
+    hdr = (f"{'arch':17s} {'shape':11s} {'mesh':8s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'dominant':10s} {'useful':>6s} {'tempGiB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for rl in rows:
+        print(rl.row())
+    # skipped cells
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] == "skipped":
+            mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+            print(f"{r['arch']:17s} {r['shape']:11s} {mesh:8s} {'(skipped: ' + r['reason'][:40] + ')'}")
+
+
+if __name__ == "__main__":
+    main()

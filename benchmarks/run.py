@@ -1,0 +1,56 @@
+"""Benchmark entry: one section per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
+with human-readable section reports around them.  Full-depth variants run
+standalone: ``python -m benchmarks.table1_methods`` etc.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("== kernels (µs/call, CPU oracle timings) ==")
+    from benchmarks import kernels_bench
+
+    kernels_bench.main()
+
+    print("\n== Table 1: four methods, time-to-solution ==")
+    from benchmarks import table1_methods
+
+    rows = table1_methods.main(nt=4, n=2)
+    for r in rows:
+        print(f"table1_{r['method']},{r['wall_s_per_step']*1e6:.0f},iters={r['iters']}")
+
+    print("\n== Table 2: phase breakdown ==")
+    from benchmarks import table2_breakdown
+
+    br = table2_breakdown.main(n=2)
+    for k, v in br.items():
+        print(f"table2_{k},{v*1e6:.0f},s_per_step={v:.4f}")
+
+    print("\n== Fig 2: per-step cost over the record ==")
+    from benchmarks import fig2_timeseries
+
+    iters, amp = fig2_timeseries.main(nt=12, n=3)
+
+    print("\n== §3 NN surrogate ==")
+    from benchmarks import nn_surrogate
+
+    info = nn_surrogate.main(n_waves=8, nt=64, steps=300)
+    print(f"nn_surrogate,{info['train_s']*1e6:.0f},val_mae={info['val_mae']:.4f}")
+
+    print("\n== Roofline (from dry-run artifacts, if present) ==")
+    from benchmarks import roofline
+
+    try:
+        roofline.main()
+    except Exception as e:  # dry-run not yet executed
+        print(f"(roofline unavailable: {e})")
+
+
+if __name__ == "__main__":
+    main()

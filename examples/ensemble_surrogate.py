@@ -1,0 +1,54 @@
+"""§3 end-to-end: massive-ensemble simulation → NN surrogate training.
+
+    PYTHONPATH=src python examples/ensemble_surrogate.py [--waves 10] [--nt 128]
+
+1. Generates band-limited random bedrock waves (paper §3: uniform amplitude,
+   >2.5 Hz removed).
+2. Runs the nonlinear 3-D FEM ensemble under Proposed Method 2 (streamed
+   multispring state) and records the observation-point response.
+3. Fits the 1D-CNN+LSTM encoder-decoder surrogate with a small random
+   hyperparameter search (the paper uses Optuna; same space).
+4. Evaluates on a held-out wave — the Fig. 5(c) check.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--waves", type=int, default=10)
+    ap.add_argument("--nt", type=int, default=128)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    from repro.surrogate.dataset import EnsembleConfig, generate
+    from repro.surrogate.train import fit, search
+    from repro.surrogate.model import apply
+
+    print(f"[1/3] ensemble: {args.waves} waves × {args.nt} time steps (Proposed Method 2)")
+    x, y = generate(EnsembleConfig(n_waves=args.waves, nt=args.nt, mesh_n=(3, 3, 3), nspring=12))
+    print(f"      responses: peak |v| = {np.abs(y).max():.3e} m/s")
+
+    print(f"[2/3] surrogate search: {args.trials} trials × {args.steps} steps")
+    cfg, params, info = search(x, y, trials=args.trials, steps=args.steps, latent_cap=64)
+    print(f"      best: n_c={cfg.n_c} n_lstm={cfg.n_lstm} k={cfg.kernel} "
+          f"latent={cfg.latent} lr={cfg.lr:.2e} → val MAE {info['val_mae']:.4f} (normalized)")
+
+    print("[3/3] held-out check (Fig. 5(c) analogue)")
+    import jax.numpy as jnp
+
+    pred = apply(params, cfg, jnp.asarray(x[:1]))
+    scale = info["scale"]
+    err = float(np.abs(np.asarray(pred) * scale - y[:1]).max())
+    print(f"      max waveform error vs 3-D nonlinear analysis: {err:.3e} m/s "
+          f"(response peak {np.abs(y[:1]).max():.3e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: the paper's four methods on a synthetic layered basin.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 12] [--n 3]
+
+Runs Baseline 1/2 and Proposed 1/2 (Algorithms 1–4) on the same input wave
+and verifies they advance identical physics, then prints the time and
+memory-placement comparison — the paper's Table-1 story at laptop scale.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--n", type=int, default=3, help="mesh cells per side")
+    ap.add_argument("--nspring", type=int, default=30)
+    ap.add_argument("--x64", action="store_true", help="fp64 (paper fidelity)")
+    args = ap.parse_args()
+    if args.x64:
+        jax.config.update("jax_enable_x64", True)
+
+    from repro.fem import meshgen, methods
+
+    mesh = meshgen.generate(args.n, args.n, args.n, pad_elems_to=8)
+    print(f"mesh: {mesh.n_elem} tet10 elements, {mesh.ndof} DOF, "
+          f"{mesh.n_elem * 4 * args.nspring} springs "
+          f"({mesh.n_elem * 4 * args.nspring * 40 / 2**20:.1f} MB of θ state)")
+    cfg = methods.SeismicConfig(dt=0.01, tol=1e-6, maxiter=600, npart=4,
+                                nspring=args.nspring)
+    t = np.arange(args.steps) * cfg.dt
+    wave = np.zeros((args.steps, 3))
+    wave[:, 0] = 0.4 * np.sin(2 * np.pi * 2.0 * t)
+    wave[:, 2] = 0.2 * np.sin(2 * np.pi * 1.3 * t)
+
+    results = {}
+    for m in methods.METHODS:
+        t0 = time.time()
+        out = methods.run(mesh, cfg, wave, method=m, observe=mesh.surface[:4])
+        jax.block_until_ready(out["v"])
+        dt_run = time.time() - t0
+        results[m] = out
+        print(f"{m:12s} {dt_run:6.1f}s  max CG iters {int(np.asarray(out['iters']).max()):4d}  "
+              f"peak |v| {float(np.abs(np.asarray(out['velocity_history'])).max()):.3e} m/s")
+
+    ref = np.asarray(results["baseline1"]["velocity_history"])
+    for m in ("baseline2", "proposed1", "proposed2"):
+        d = np.abs(np.asarray(results[m]["velocity_history"]) - ref).max()
+        print(f"{m} vs baseline1: max |Δv| = {d:.2e}  "
+              f"({'identical physics ✓' if d < 1e-4 * max(np.abs(ref).max(), 1e-12) else 'MISMATCH'})")
+    print("\nproposed1/2 keep the spring state θ in host memory and stream it "
+          "through the device in blocks (Algorithm 3); proposed2 additionally "
+          "runs matrix-free (EBE) with a mixed-precision inner preconditioner.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving demo: prefill → decode with (optionally host-offloaded) KV.
+
+    PYTHONPATH=src python examples/serve_lm.py --new 16 --batch 4 [--offload-kv]
+
+Demonstrates the serving side of the heterogeneous-memory manager: with
+``--offload-kv`` the KV cache lives in host memory as layer-group blocks and
+streams through the device each step (Algorithm 3 with attention as the
+per-block kernel).  Both paths must emit identical tokens.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", help="uniform-stack archs for offload")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=12)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--npart", type=int, default=2)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.models import transformer as T
+    from repro.serving import decode as D
+
+    cfg = ARCHS[args.arch].reduced()
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (args.batch, args.prompt), 0, cfg.vocab_size)
+    total = args.prompt + args.new
+
+    # resident-cache reference path (prefill emits the decode cache)
+    t0 = time.time()
+    logits, state = T.prefill(params, cfg, {"tokens": prompt}, cache_len=total)
+    step = jax.jit(lambda p, t, s: T.decode_step(p, cfg, t, s))
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
+    out_res = [cur]
+    for _ in range(args.new - 1):
+        logits, state = step(params, cur, state)
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
+        out_res.append(cur)
+    res = np.asarray(jnp.concatenate(out_res, 1))
+    print(f"resident KV: {args.new} tokens × batch {args.batch} in {time.time()-t0:.1f}s")
+
+    # host-offloaded KV path (prefill by decode for simplicity)
+    t0 = time.time()
+    st = {"pos": jnp.zeros((), jnp.int32)}
+    blocks = D.make_kv_blocks(cfg, args.batch, cache_len=total, npart=args.npart,
+                              dtype=jnp.float32)
+    ostep = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(p, cfg, t, s, b))
+    for t in range(args.prompt):
+        logits, st, blocks = ostep(params, prompt[:, t : t + 1], st, blocks)
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
+    out_off = [cur]
+    for _ in range(args.new - 1):
+        logits, st, blocks = ostep(params, cur, st, blocks)
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
+        out_off.append(cur)
+    off = np.asarray(jnp.concatenate(out_off, 1))
+    print(f"offloaded KV ({args.npart} layer-group blocks, host-resident): {time.time()-t0:.1f}s")
+    match = (res == off).mean()
+    print(f"token agreement: {match*100:.1f}%  {'✓' if match == 1.0 else '(fp divergence)'}")
+    print("sample:", res[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

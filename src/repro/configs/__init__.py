@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable  # noqa: F401
+from repro.configs.registry import ARCHS, get  # noqa: F401

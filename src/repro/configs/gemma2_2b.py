@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import GEMMA2_2B
+
+def config():
+    return GEMMA2_2B

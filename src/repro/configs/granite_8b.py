@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import GRANITE_8B
+
+def config():
+    return GRANITE_8B

@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import INTERNVL2_1B
+
+def config():
+    return INTERNVL2_1B

@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import LLAMA3_405B
+
+def config():
+    return LLAMA3_405B

@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import MAMBA2_780M
+
+def config():
+    return MAMBA2_780M

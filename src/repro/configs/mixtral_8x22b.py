@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import MIXTRAL_8X22B
+
+def config():
+    return MIXTRAL_8X22B

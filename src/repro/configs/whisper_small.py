@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import WHISPER_SMALL
+
+def config():
+    return WHISPER_SMALL

@@ -1,0 +1,5 @@
+"""Assigned architecture config — exact dims in registry.py."""
+from repro.configs.registry import ZAMBA2_7B
+
+def config():
+    return ZAMBA2_7B

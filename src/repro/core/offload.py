@@ -1,0 +1,172 @@
+"""Offload policies: the paper's HMM applied to neural-network training.
+
+Three state classes in an LM trainer exceed HBM long before weights do, and
+each maps onto Algorithm 3 of the paper with a different "Multispring":
+
+* **optimizer state** (Adam ``m,v`` fp32 = 8 bytes/param): blocks of moment
+  leaves live in ``pinned_host``; the update streams each block through the
+  device — copy-in ↔ compute overlap is exactly the paper's pipeline, with
+  the Adam update playing the role of the constitutive-law evaluation.
+* **activations** (long-sequence training): `jax.checkpoint` policy that
+  offloads named residuals to host instead of rematerializing or keeping
+  them in HBM.
+* **KV cache** (long-context decode): see serving/kvcache.py, which streams
+  host-resident cache blocks per layer-group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hetmem
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update_leaf,
+    clip_by_global_norm,
+    init_moments_leaf,
+)
+from repro.utils.tree import group_like
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """Which HMM features are on. Mirrors the paper's method ladder:
+
+    everything False      → Baseline 2 (accelerator-resident state)
+    optimizer_state=True  → Proposed 1 applied to training
+    + activations/KV      → further beyond-paper applications
+    """
+
+    optimizer_state: bool = False
+    optimizer_npart: int = 8
+    activations: bool = False
+    activation_names: tuple[str, ...] = ("residual", "decoder_layer")
+    kv_cache: bool = False
+    kv_cache_npart: int = 8
+
+
+# ---------------------------------------------------------------------------
+# Offloaded AdamW (Algorithm 3 with Adam as the per-block kernel)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OffloadedAdamWState:
+    step: jnp.ndarray
+    moments: hetmem.PartitionedState  # blocks of {"m","v"} leaves, host-resident
+
+
+jax.tree_util.register_pytree_node(
+    OffloadedAdamWState,
+    lambda s: ((s.step, s.moments), None),
+    lambda _, c: OffloadedAdamWState(step=c[0], moments=c[1]),
+)
+
+
+def offloaded_adamw_init(
+    params: Any, cfg: AdamWConfig, off: OffloadConfig, host: bool = True
+) -> OffloadedAdamWState:
+    """Build host-resident moment blocks matching ``params``' leaf layout."""
+    moments = jax.tree_util.tree_map(lambda p: init_moments_leaf(p, cfg), params)
+    # Partition by *param* leaves so grads/params group identically later:
+    # one moments "leaf" per param leaf ({"m","v"} dict kept whole).
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    mv_flat = treedef.flatten_up_to(moments)
+    wrapped = jax.tree_util.tree_unflatten(treedef, [_Opaque(mv) for mv in mv_flat])
+    ps = hetmem.PartitionedState.partition(wrapped, off.optimizer_npart)
+    ps = _unwrap_blocks(ps)
+    if host and hetmem.host_memory_available():
+        ps = hetmem.PartitionedState(
+            blocks=[hetmem.put_host(blk) for blk in ps.blocks], spec=ps.spec
+        )
+    return OffloadedAdamWState(step=jnp.zeros((), jnp.int32), moments=ps)
+
+
+class _Opaque:
+    """Wrap a subtree so the block partitioner treats it as one leaf."""
+
+    def __init__(self, tree: Any):
+        self.tree = tree
+        leaves = jax.tree_util.tree_leaves(tree)
+        import numpy as np
+
+        self.shape = (sum(int(np.prod(x.shape)) for x in leaves),)
+        self.dtype = leaves[0].dtype
+
+
+def _unwrap_blocks(ps: hetmem.PartitionedState) -> hetmem.PartitionedState:
+    blocks = [[leaf.tree if isinstance(leaf, _Opaque) else leaf for leaf in blk] for blk in ps.blocks]
+    return hetmem.PartitionedState(blocks=blocks, spec=ps.spec)
+
+
+def offloaded_adamw_apply(
+    grads: Any,
+    params: Any,
+    state: OffloadedAdamWState,
+    cfg: AdamWConfig,
+    *,
+    offload: bool = True,
+) -> tuple[Any, OffloadedAdamWState]:
+    """Streamed AdamW step (Algorithm 3).
+
+    Per block j: moments_j host→device ‖ update compute of block j-1; the
+    unrolled chain lets XLA overlap.  New params stay device-resident (they
+    are the "D" of Algorithm 3); new moments return to host.
+    Bit-identical to ``adamw_apply`` — asserted by tests.
+    """
+    if cfg.grad_clip_norm:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    gblocks = group_like(grads, state.moments.spec)
+    pblocks = group_like(params, state.moments.spec)
+
+    def update_block(mv_blk, g_blk, p_blk):
+        new_mv, new_p = [], []
+        for mv, g, p in zip(mv_blk, g_blk, p_blk):
+            p2, mv2 = adamw_update_leaf(g, p, mv, state.step, cfg)
+            new_mv.append(mv2)
+            new_p.append(p2)
+        return new_mv, new_p
+
+    new_moments, new_pblocks = hetmem.stream_blocks(
+        update_block,
+        state.moments,
+        per_block=(gblocks, pblocks),
+        offload=offload,
+        collect=True,
+    )
+    flat = state.moments.spec.blocks_to_flat(new_pblocks)
+    _, treedef = jax.tree_util.tree_flatten(params)
+    new_params = jax.tree_util.tree_unflatten(treedef, flat)
+    return new_params, OffloadedAdamWState(step=state.step + 1, moments=new_moments)
+
+
+# ---------------------------------------------------------------------------
+# Activation offload (remat policy)
+# ---------------------------------------------------------------------------
+
+
+def activation_offload_policy(names: tuple[str, ...]):
+    """Checkpoint policy: offload tensors tagged ``checkpoint_name(x, name)``.
+
+    On TPU the offloaded residuals move HBM→host during forward and stream
+    back during backward — the backward pass is the "second sweep" of the
+    streamed loop.  Everything untagged is rematerialized (the remat/EBE
+    duality: recompute instead of store, see DESIGN.md §4).
+    """
+    return jax.checkpoint_policies.save_and_offload_only_these_names(
+        names_which_can_be_saved=[],
+        names_which_can_be_offloaded=list(names),
+        offload_src="device",
+        offload_dst="pinned_host",
+    )
+
+
+def remat_policy(off: OffloadConfig, save_names: tuple[str, ...] = ()):
+    if off.activations:
+        return activation_offload_policy(off.activation_names)
+    if save_names:
+        return jax.checkpoint_policies.save_only_these_names(*save_names)
+    return jax.checkpoint_policies.nothing_saveable

@@ -1,0 +1,1 @@
+"""3-D nonlinear seismic ground response FEM — the paper's target problem."""

@@ -1,0 +1,146 @@
+"""Sparse matrix-vector products: stored BCSR vs matrix-free EBE.
+
+The paper's Proposed Method 2 converts the memory-bandwidth-bound CRS SpMV
+into on-the-fly element products (EBE, [8]) — more FLOPs, far less memory
+traffic, no stored matrix.  TPU adaptation (DESIGN.md §2): the scatter-add
+that CUDA does with L2 atomics becomes a *sorted segment-sum* over a
+precomputed permutation (deterministic, TPU-idiomatic).
+
+The jnp implementations here are the reference path; kernels/ebe_matvec
+holds the Pallas kernel for the per-element contraction (the flop hotspot),
+wired in through the same gather/scatter maps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fem import quadrature as quad
+from repro.fem.assembly import physical_gradients_jnp
+
+
+# ---------------------------------------------------------------------------
+# BCSR 3×3 (stored-matrix) path
+# ---------------------------------------------------------------------------
+
+
+def bcsr_matvec(
+    values: jnp.ndarray,  # [nnzb,3,3]
+    rowids: np.ndarray,   # [nnzb]
+    col_idx: np.ndarray,  # [nnzb]
+    x: jnp.ndarray,       # [N,3]
+) -> jnp.ndarray:
+    """y[i] = Σ_j A[i,j] x[j] with 3×3 blocks (gather + segment-sum)."""
+    xj = x[jnp.asarray(col_idx)]                      # [nnzb,3]
+    prod = jnp.einsum("nab,nb->na", values, xj)       # [nnzb,3]
+    return jax.ops.segment_sum(prod, jnp.asarray(rowids), num_segments=x.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# shared gather / scatter machinery
+# ---------------------------------------------------------------------------
+
+
+def gather_elem(u: jnp.ndarray, conn: np.ndarray) -> jnp.ndarray:
+    """Nodal values per element ``[E,10,3]`` from ``u [N,3]``."""
+    return u[jnp.asarray(conn)]
+
+
+def scatter_add(
+    f_e: jnp.ndarray,          # [E,10,3]
+    scatter_perm: np.ndarray,  # [E*30]
+    scatter_segids: np.ndarray,
+    ndof: int,
+) -> jnp.ndarray:
+    """Σ per dof via sorted segment-sum (atomic-add replacement) → [N,3]."""
+    flat = f_e.reshape(-1)[jnp.asarray(scatter_perm)]
+    y = jax.ops.segment_sum(
+        flat, jnp.asarray(scatter_segids), num_segments=ndof, indices_are_sorted=True
+    )
+    return y.reshape(-1, 3)
+
+
+# ---------------------------------------------------------------------------
+# EBE (matrix-free) path — strain / stress / element matvec
+# ---------------------------------------------------------------------------
+
+
+def elem_strain(u_e: jnp.ndarray, Jinv: jnp.ndarray) -> jnp.ndarray:
+    """Voigt strain at Gauss points ``[E,P,6]`` from ``u_e [E,10,3]``.
+
+    ε = sym(∇u); engineering shear (γ = 2ε_offdiag) to match B-matrices.
+    """
+    g = physical_gradients_jnp(Jinv)                  # [E,P,10,3]
+    H = jnp.einsum("epnj,eni->epij", g, u_e)          # ∂u_i/∂x_j
+    exx, eyy, ezz = H[..., 0, 0], H[..., 1, 1], H[..., 2, 2]
+    gxy = H[..., 0, 1] + H[..., 1, 0]
+    gyz = H[..., 1, 2] + H[..., 2, 1]
+    gzx = H[..., 2, 0] + H[..., 0, 2]
+    return jnp.stack([exx, eyy, ezz, gxy, gyz, gzx], axis=-1)
+
+
+def elem_internal_force(
+    sigma: jnp.ndarray,  # [E,P,6] Voigt stress at Gauss points
+    Jinv: jnp.ndarray,
+    wdet: jnp.ndarray,   # [E,P]
+) -> jnp.ndarray:
+    """f_e ``[E,10,3]`` = Σ_p wdet_p B_pᵀ σ_p, via the ∇N contraction."""
+    g = physical_gradients_jnp(Jinv)  # [E,P,10,3]
+    s = sigma * wdet[..., None]       # fold weights
+    # Voigt → tensor rows: f[n,i] = Σ_p σ_ij(p) ∂N_n/∂x_j
+    sxx, syy, szz, sxy, syz, szx = (s[..., k] for k in range(6))
+    fx = jnp.einsum("epn,ep->en", g[..., 0], sxx) + jnp.einsum("epn,ep->en", g[..., 1], sxy) + jnp.einsum("epn,ep->en", g[..., 2], szx)
+    fy = jnp.einsum("epn,ep->en", g[..., 0], sxy) + jnp.einsum("epn,ep->en", g[..., 1], syy) + jnp.einsum("epn,ep->en", g[..., 2], syz)
+    fz = jnp.einsum("epn,ep->en", g[..., 0], szx) + jnp.einsum("epn,ep->en", g[..., 1], syz) + jnp.einsum("epn,ep->en", g[..., 2], szz)
+    return jnp.stack([fx, fy, fz], axis=-1)
+
+
+def ebe_element_matvec(
+    u_e: jnp.ndarray,    # [E,10,3]
+    D: jnp.ndarray,      # [E,P,6,6] tangent at Gauss points
+    Jinv: jnp.ndarray,
+    wdet: jnp.ndarray,
+    coef_e: jnp.ndarray | None = None,  # [E] per-element scale (e.g. 1+2β_e/dt)
+) -> jnp.ndarray:
+    """K_e u_e without forming K_e: ε → Dε → Bᵀ, fused (the EBE product)."""
+    eps = elem_strain(u_e, Jinv)                       # [E,P,6]
+    sig = jnp.einsum("epab,epb->epa", D, eps)          # [E,P,6]
+    w = wdet if coef_e is None else wdet * coef_e[:, None]
+    return elem_internal_force(sig, Jinv, w)
+
+
+def ebe_matvec(
+    x: jnp.ndarray,  # [N,3]
+    D: jnp.ndarray,
+    mesh,
+    coef_e: jnp.ndarray | None = None,
+    element_kernel=None,
+) -> jnp.ndarray:
+    """Full matrix-free K·x (gather → element product → sorted scatter).
+
+    ``element_kernel`` lets the Pallas kernel replace the jnp contraction.
+    """
+    u_e = gather_elem(x, mesh.conn)
+    kern = element_kernel or ebe_element_matvec
+    f_e = kern(u_e, D, jnp.asarray(mesh.Jinv, x.dtype), jnp.asarray(mesh.wdet, x.dtype), coef_e)
+    return scatter_add(f_e, mesh.scatter_perm, mesh.scatter_segids, mesh.ndof)
+
+
+def strain_at_points(u: jnp.ndarray, mesh) -> jnp.ndarray:
+    """Total strain at all evaluation points ``[E*P, 6]`` (multispring input)."""
+    u_e = gather_elem(u, mesh.conn)
+    eps = elem_strain(u_e, jnp.asarray(mesh.Jinv, u.dtype))
+    E, P = eps.shape[:2]
+    return eps.reshape(E * P, 6)
+
+
+def internal_force(sigma_pts: jnp.ndarray, mesh) -> jnp.ndarray:
+    """Assembled internal force q ``[N,3]`` from point stresses ``[E*P,6]``."""
+    P = quad.NPOINT
+    E = mesh.n_elem
+    sig = sigma_pts.reshape(E, P, 6)
+    f_e = elem_internal_force(
+        sig, jnp.asarray(mesh.Jinv, sigma_pts.dtype), jnp.asarray(mesh.wdet, sigma_pts.dtype)
+    )
+    return scatter_add(f_e, mesh.scatter_perm, mesh.scatter_segids, mesh.ndof)

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot-spots, each as
+# <name>.py (pl.pallas_call + BlockSpec) + ops.py (jit wrapper) + ref.py
+# (pure-jnp oracle): ebe_matvec (Alg. 4 EBE product), multispring
+# (constitutive update), flash_attention (LM serving/prefill).

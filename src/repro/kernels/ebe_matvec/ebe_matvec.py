@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the EBE element product (Proposed Method 2 hotspot).
+
+TPU adaptation of the paper's CUDA EBE kernel (DESIGN.md §2):
+
+* the **element index lives on the 128-lane axis** — every per-element
+  scalar quantity (a Jacobian entry, one strain component at one Gauss
+  point) is a `[TILE_E]`-wide vector register;
+* the small tensor dimensions (10 nodes × 3 coords × 6 Voigt × P Gauss
+  points) are **fully unrolled at trace time**; the reference shape-function
+  gradients are compile-time constants folded into the FMA stream;
+* no stored B or K_e — only `J⁻¹` (9 lanes-wide vectors), `wdet` and the
+  constitutive `D` stream through VMEM, which is the entire point of EBE:
+  trade FLOPs for memory traffic and capacity.
+
+Data layout is struct-of-arrays with E innermost (``[k, E]``) so each block
+is a ``[k, TILE_E]`` VMEM tile with E on lanes; ops.py does the transposes.
+
+VMEM budget per block (TILE_E=512, fp32):
+  u 30·512·4 = 60 KB, Jinv 9·512·4 = 18 KB, D 4·36·512·4 = 288 KB,
+  wdet 4·512·4 = 8 KB, out 60 KB, intermediates ≲ 200 KB → ≪ 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fem import quadrature as quad
+
+NPOINT = quad.NPOINT
+NNODE = quad.NNODE
+
+# static reference gradients: python floats, folded into the kernel
+_GREF = [[[float(quad.GRADN_REF[p, n, k]) for k in range(3)] for n in range(NNODE)] for p in range(NPOINT)]
+
+_VOIGT_PAIRS = ((0, 0), (1, 1), (2, 2), (0, 1), (1, 2), (2, 0))
+
+
+def _ebe_kernel(u_ref, jinv_ref, wdet_ref, d_ref, coef_ref, out_ref):
+    """One TILE_E block. Refs (leading dim = small, lanes = elements):
+
+    u    [30, T]   nodal displacements (node-major: n0x n0y n0z n1x …)
+    jinv [9,  T]   J⁻¹ row-major
+    wdet [P,  T]   quadrature weight × |J|
+    d    [P*36, T] tangent, Voigt row-major per point
+    coef [1,  T]   per-element scale (1 + 2β_e/dt)
+    out  [30, T]
+    """
+    u = u_ref[...]
+    ji = jinv_ref[...]
+    wd = wdet_ref[...]
+    dd = d_ref[...]
+    cf = coef_ref[0]
+
+    jinv = [[ji[3 * r + c] for c in range(3)] for r in range(3)]  # [3][3] of [T]
+    un = [[u[3 * n + i] for i in range(3)] for n in range(NNODE)]  # [10][3] of [T]
+
+    f = [[jnp.zeros_like(u[0]) for _ in range(3)] for _ in range(NNODE)]
+    for p in range(NPOINT):
+        # physical gradients g[n][j] = Σ_k GREF[p][n][k] · J⁻¹[k][j]
+        g = [
+            [
+                sum(_GREF[p][n][k] * jinv[k][j] for k in range(3) if _GREF[p][n][k] != 0.0)
+                for j in range(3)
+            ]
+            for n in range(NNODE)
+        ]
+        # displacement gradient H[i][j] = Σ_n u[n][i] g[n][j]
+        H = [
+            [sum(un[n][i] * g[n][j] for n in range(NNODE)) for j in range(3)]
+            for i in range(3)
+        ]
+        eps = [
+            H[0][0],
+            H[1][1],
+            H[2][2],
+            H[0][1] + H[1][0],
+            H[1][2] + H[2][1],
+            H[2][0] + H[0][2],
+        ]
+        # σ = D ε  (Voigt 6×6, row-major slab of d)
+        sig = [
+            sum(dd[36 * p + 6 * a + b] * eps[b] for b in range(6)) for a in range(6)
+        ]
+        w = wd[p] * cf
+        sw = [sig[a] * w for a in range(6)]
+        # tensor form for the Bᵀσ contraction
+        st = [[sw[0], sw[3], sw[5]], [sw[3], sw[1], sw[4]], [sw[5], sw[4], sw[2]]]
+        for n in range(NNODE):
+            for i in range(3):
+                f[n][i] = f[n][i] + sum(st[i][j] * g[n][j] for j in range(3))
+
+    out_ref[...] = jnp.stack([f[n][i] for n in range(NNODE) for i in range(3)])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_e", "interpret"))
+def ebe_element_matvec_pallas(
+    u_e: jnp.ndarray,    # [E,10,3]
+    D: jnp.ndarray,      # [E,P,6,6]
+    Jinv: jnp.ndarray,   # [E,3,3]
+    wdet: jnp.ndarray,   # [E,P]
+    coef: jnp.ndarray | None = None,  # [E]
+    *,
+    tile_e: int = 512,
+    interpret: bool = True,  # CPU container: interpret; TPU: False
+) -> jnp.ndarray:
+    E = u_e.shape[0]
+    dt = u_e.dtype
+    if coef is None:
+        coef = jnp.ones((E,), dt)
+    Epad = -(-E // tile_e) * tile_e
+    pad = Epad - E
+
+    uT = jnp.pad(u_e.reshape(E, 30), ((0, pad), (0, 0))).T          # [30,Ep]
+    jT = jnp.pad(Jinv.reshape(E, 9), ((0, pad), (0, 0))).T          # [9,Ep]
+    wT = jnp.pad(wdet, ((0, pad), (0, 0))).T                        # [P,Ep]
+    dT = jnp.pad(D.reshape(E, NPOINT * 36), ((0, pad), (0, 0))).T   # [P*36,Ep]
+    cT = jnp.pad(coef.astype(dt)[None, :], ((0, 0), (0, pad)))      # [1,Ep]
+
+    grid = (Epad // tile_e,)
+    spec = lambda rows: pl.BlockSpec((rows, tile_e), lambda i: (0, i))
+    out = pl.pallas_call(
+        _ebe_kernel,
+        grid=grid,
+        in_specs=[spec(30), spec(9), spec(NPOINT), spec(NPOINT * 36), spec(1)],
+        out_specs=spec(30),
+        out_shape=jax.ShapeDtypeStruct((30, Epad), dt),
+        interpret=interpret,
+    )(uT, jT, wT, dT, cT)
+    return out.T[:E].reshape(E, NNODE, 3)

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    attention_ref,
+    flash_attention,
+    flash_attention_pallas,
+)

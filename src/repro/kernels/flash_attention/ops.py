@@ -1,0 +1,20 @@
+"""Jitted public entry for flash attention (TPU kernel / interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+                    interpret: bool | None = None, **kw):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        interpret=interpret, **kw,
+    )
+
+
+__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref"]

@@ -1,0 +1,1 @@
+from repro.kernels.multispring.ops import multispring_pallas, multispring_ref, update  # noqa: F401

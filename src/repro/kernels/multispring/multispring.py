@@ -1,0 +1,202 @@
+"""Pallas TPU kernel for the multi-spring constitutive update.
+
+TPU adaptation of the paper's CUDA multi-spring kernel (DESIGN.md §2):
+
+* **springs on the 128-lane axis, evaluation points on sublanes** — a block
+  is ``[TILE_P, S_pad]`` with S padded to a lane multiple by zero-*weight*
+  springs (they compute but contribute nothing);
+* the per-spring Masing branch logic (SIMT divergent threads on the GPU)
+  becomes **lane predication** (`jnp.where`), which is exactly how the VPU
+  executes divergent element-wise control flow;
+* the two reductions over springs — σ = (w·τ)ᵀn and the tangent assembly
+  D = Σ w·G_tan·(n⊗n) — are ``[TILE_P,S] @ [S,6]`` and ``[TILE_P,S] @ [S,36]``
+  matmuls: they land on the **MXU**, which the scalar-per-thread GPU
+  formulation cannot do.  This is the kernel's main TPU-native win.
+
+Each grid step processes TILE_P evaluation points; the full spring state for
+those points streams HBM→VMEM→HBM once — the kernel is the compute stage of
+the Algorithm-3 pipeline, so its block size is the unit the heterogeneous
+memory manager streams from host memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ms_kernel(
+    eps_ref, grev_ref, trev_ref, gprev_ref, gmax_ref, dir_ref, virg_ref,
+    g0_ref, gr_ref, be_ref, bulk_ref, n_ref, nt_ref, nn_ref, w_ref,
+    # outputs
+    sig_ref, d_ref, frac_ref,
+    ngrev_ref, ntrev_ref, ngprev_ref, ngmax_ref, ndir_ref, nvirg_ref,
+):
+    """One TILE_P block of evaluation points.
+
+    eps [T,6] · state [T,S] · params [T,1] · n [S,6] (+ nᵀ [6,S], nn [S,36],
+    w [1,S]) → σ [T,6], D [T,36], frac [T,1], new state [T,S].
+    """
+    eps = eps_ref[...]
+    G0 = g0_ref[...]       # [T,1]
+    gr = gr_ref[...]
+    be = be_ref[...]
+    bulk = bulk_ref[...]
+    n = n_ref[...]         # [S,6]
+    nT = nt_ref[...]       # [6,S]
+    nn = nn_ref[...]       # [S,36]
+    w = w_ref[...]         # [1,S]
+
+    def backbone(g):
+        x = jnp.abs(g) / gr
+        return G0 * g / (1.0 + x**be)
+
+    def backbone_tan(g):
+        x = jnp.abs(g) / gr
+        den = 1.0 + x**be
+        return G0 * (1.0 + (1.0 - be) * x**be) / (den * den)
+
+    gamma = jnp.dot(eps, nT, preferred_element_type=eps.dtype)  # [T,S] MXU
+    g_prev = gprev_ref[...]
+    dgam = gamma - g_prev
+    moving = jnp.sign(dgam).astype(jnp.int32)
+    dir_old = dir_ref[...]
+    virgin_old = virg_ref[...] == 1
+
+    tau_prev = jnp.where(
+        virgin_old,
+        backbone(g_prev),
+        trev_ref[...] + 2.0 * backbone(0.5 * (g_prev - grev_ref[...])),
+    )
+    reversal = (moving != 0) & (dir_old != 0) & (moving != dir_old)
+    gamma_rev = jnp.where(reversal, g_prev, grev_ref[...])
+    tau_rev = jnp.where(reversal, tau_prev, trev_ref[...])
+    direction = jnp.where(moving != 0, moving, dir_old)
+    virgin = jnp.where(reversal, 0, virg_ref[...])
+
+    gmax = gmax_ref[...]
+    rejoin = jnp.abs(gamma) >= gmax
+    virgin = jnp.where(rejoin, 1, virgin)
+    gamma_max = jnp.maximum(gmax, jnp.abs(gamma))
+
+    on_bb = virgin == 1
+    tau = jnp.where(on_bb, backbone(gamma), tau_rev + 2.0 * backbone(0.5 * (gamma - gamma_rev)))
+    g_tan = jnp.where(on_bb, backbone_tan(gamma), backbone_tan(0.5 * (gamma - gamma_rev)))
+    g_tan = jnp.maximum(g_tan, 1e-3 * G0)
+
+    tw = tau * w                                  # [T,S]
+    gw = g_tan * w
+    sigma_dev = jnp.dot(tw, n, preferred_element_type=eps.dtype)   # [T,6] MXU
+    D_dev = jnp.dot(gw, nn, preferred_element_type=eps.dtype)      # [T,36] MXU
+
+    vol = eps[:, 0:1] + eps[:, 1:2] + eps[:, 2:3]  # [T,1]
+    # volumetric masks built from iota (kernels may not capture constants)
+    i6 = jax.lax.iota(jnp.int32, 6)
+    one6 = (i6 < 3).astype(eps.dtype)
+    sig_ref[...] = sigma_dev + bulk * vol * one6[None, :]
+    i36 = jax.lax.iota(jnp.int32, 36)
+    one36 = (((i36 // 6) < 3) & ((i36 % 6) < 3)).astype(eps.dtype)
+    d_ref[...] = D_dev + bulk * one36[None, :]
+
+    # damping fraction: mean over springs of 1 − 1/(1+(γ_max/γr)^β)
+    x = (gamma_max / gr) ** be
+    wsum = jnp.maximum(jnp.sum(jnp.sign(jnp.abs(w))), 1.0)  # count real springs
+    frac = jnp.sum(jnp.where(w > 0, 1.0 - 1.0 / (1.0 + x), 0.0), axis=1, keepdims=True) / wsum
+    frac_ref[...] = frac
+
+    ngrev_ref[...] = gamma_rev
+    ntrev_ref[...] = tau_rev
+    ngprev_ref[...] = gamma
+    ngmax_ref[...] = gamma_max
+    ndir_ref[...] = direction
+    nvirg_ref[...] = virgin
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
+def multispring_pallas(
+    eps: jnp.ndarray,                 # [P,6]
+    state: dict[str, jnp.ndarray],    # [P,S] each
+    params,                           # SpringParams with [P] fields
+    n: jnp.ndarray,                   # [S,6]
+    w: jnp.ndarray,                   # [S]
+    *,
+    tile_p: int = 256,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray], jnp.ndarray]:
+    """Returns (σ [P,6], D [P,6,6], new_state, frac [P]) — kernel layout/pad
+    handled here: S → lane multiple via zero-weight springs, P → tile_p."""
+    P, S = state["gamma_rev"].shape
+    dt = eps.dtype
+    S_pad = max(128, -(-S // 128) * 128)
+    P_pad = -(-P // tile_p) * tile_p
+
+    def padP(x, c=0):
+        return jnp.pad(x, ((0, P_pad - P),) + ((0, 0),) * (x.ndim - 1), constant_values=c)
+
+    def padS(x):
+        return jnp.pad(x, ((0, P_pad - P), (0, S_pad - S)))
+
+    n_p = jnp.pad(n.astype(dt), ((0, S_pad - S), (0, 0)))
+    w_p = jnp.pad(w.astype(dt), (0, S_pad - S))[None, :]       # zero-weight pad springs
+    nn = (n_p[:, :, None] * n_p[:, None, :]).reshape(S_pad, 36)
+
+    col = lambda a: padP(a.astype(dt)[:, None], 1)  # pad params with 1 (avoid /0)
+    args = [
+        padP(eps.astype(dt)),
+        padS(state["gamma_rev"].astype(dt)),
+        padS(state["tau_rev"].astype(dt)),
+        padS(state["gamma_prev"].astype(dt)),
+        padS(state["gamma_max"].astype(dt)),
+        padS(state["direction"]),
+        padS(state["virgin"]),
+        col(params.G0),
+        col(params.gamma_r),
+        col(params.beta),
+        col(params.bulk),
+        n_p,
+        n_p.T,
+        nn,
+        w_p,
+    ]
+    grid = (P_pad // tile_p,)
+    rowspec = lambda c: pl.BlockSpec((tile_p, c), lambda i: (i, 0))
+    statespec = pl.BlockSpec((tile_p, S_pad), lambda i: (i, 0))
+    fullspec = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
+    in_specs = [
+        rowspec(6),
+        statespec, statespec, statespec, statespec, statespec, statespec,
+        rowspec(1), rowspec(1), rowspec(1), rowspec(1),
+        fullspec(S_pad, 6), fullspec(6, S_pad), fullspec(S_pad, 36), fullspec(1, S_pad),
+    ]
+    out_specs = [
+        rowspec(6), rowspec(36), rowspec(1),
+        statespec, statespec, statespec, statespec, statespec, statespec,
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((P_pad, 6), dt),
+        jax.ShapeDtypeStruct((P_pad, 36), dt),
+        jax.ShapeDtypeStruct((P_pad, 1), dt),
+        jax.ShapeDtypeStruct((P_pad, S_pad), dt),
+        jax.ShapeDtypeStruct((P_pad, S_pad), dt),
+        jax.ShapeDtypeStruct((P_pad, S_pad), dt),
+        jax.ShapeDtypeStruct((P_pad, S_pad), dt),
+        jax.ShapeDtypeStruct((P_pad, S_pad), jnp.int32),
+        jax.ShapeDtypeStruct((P_pad, S_pad), jnp.int32),
+    ]
+    outs = pl.pallas_call(
+        _ms_kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*args)
+    sig, Dflat, frac, grev, trev, gprev, gmax, dire, virg = outs
+    unS = lambda a: a[:P, :S]
+    new_state = {
+        "gamma_rev": unS(grev),
+        "tau_rev": unS(trev),
+        "gamma_prev": unS(gprev),
+        "gamma_max": unS(gmax),
+        "direction": unS(dire),
+        "virgin": unS(virg),
+    }
+    return sig[:P], Dflat[:P].reshape(P, 6, 6), new_state, frac[:P, 0]

@@ -1,0 +1,24 @@
+"""Jitted public entry for the multispring kernel — drop-in for
+fem.multispring.update (the ``multispring_fn`` hook in methods.FemOperators)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.multispring.multispring import multispring_pallas
+from repro.kernels.multispring.ref import multispring_ref
+
+
+def update(eps, state, params, n, w, *, tile_p: int = 256, interpret: bool | None = None):
+    """(σ, D, new_state) with the Pallas kernel (frac recomputed by caller).
+
+    Matches fem.multispring.update's signature/returns exactly.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    sig, D, new_state, _ = multispring_pallas(
+        eps, state, params, n, w, tile_p=tile_p, interpret=interpret
+    )
+    return sig, D, new_state
+
+
+__all__ = ["update", "multispring_pallas", "multispring_ref"]

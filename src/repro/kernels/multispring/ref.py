@@ -1,0 +1,6 @@
+"""Oracle for the multispring kernel = fem.multispring.update (re-exported).
+
+The Pallas kernel mirrors its predicated-branch structure exactly; the
+oracle stays the single source of truth for the constitutive math.
+"""
+from repro.fem.multispring import SpringParams, init_state, update as multispring_ref  # noqa: F401

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell with the production sharding and NO allocation, then extract the
+roofline inputs (FLOPs, bytes, per-collective traffic, per-device memory).
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --multi-pod both --offload
+
+Results land in reports/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel import sharding as sh
+from repro.training.train_step import TrainConfig, make_train_step
+from repro.training.optimizer import AdamWConfig
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "dryrun")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg, shape) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        toks = S - (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+        batch = {"tokens": _sds((B, toks), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            batch["labels"] = _sds((B, toks), jnp.int32)
+        elif cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["labels"] = _sds((B, toks), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        toks = S - (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+        batch = {"tokens": _sds((B, toks), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        elif cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of S
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def moments_shapes(params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    mv = [{"m": _sds(p.shape, jnp.float32), "v": _sds(p.shape, jnp.float32)} for p in flat]
+    return jax.tree_util.tree_unflatten(treedef, mv)
+
+
+def moments_specs(pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: {"m": s, "v": s}, pspecs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict[str, float]:
+    """Sum output-shape bytes of collective ops in post-SPMD HLO text."""
+    import re
+
+    sizes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+             "s8": 1, "u8": 1, "s64": 8, "u64": 8, "pred": 1, "s16": 2, "u16": 2}
+    out: dict[str, float] = {}
+    pat = re.compile(
+        r"=\s*(?:\([^)]*\)\s*)?((?:[a-z0-9]+)\[[0-9,]*\][^ ]*)?\s*"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    )
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        total = 0.0
+        # output may be a tuple: sum every typed shape on the lhs of the op
+        lhs = line.split(kind)[0]
+        for dm, dims in shape_pat.findall(lhs):
+            if dm not in sizes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * sizes[dm]
+        out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, offload: bool = False) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sh.rules_for(
+        cfg, mesh, kind=shape.kind, global_batch=shape.global_batch, seq_len=shape.seq_len
+    )
+
+    if shape.kind in ("decode", "prefill"):
+        # serving runs on bf16 weights (halves FSDP gather payloads; fp32
+        # master weights are a training-only concern)
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    with L.abstract_params():
+        params, pspecs = T.init_params(cfg, jax.random.key(0))
+    pshard = sh.tree_shardings(pspecs, mesh, rules)
+    batch = input_specs(cfg, shape)
+    bshard = sh.tree_shardings(T.batch_specs(cfg, shape.kind == "train"), mesh, rules)
+    bshard = {k: bshard[k] for k in batch}
+
+    with mesh, sh.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            tcfg = TrainConfig(adamw=AdamWConfig())
+            step = make_train_step(cfg, tcfg)
+            opt = {"step": _sds((), jnp.int32), "moments": moments_shapes(params)}
+            ospecs = {"step": (), "moments": moments_specs(pspecs)}
+            oshard = sh.tree_shardings(ospecs, mesh, rules)
+
+            def fn(p, o, b):
+                import repro.training.optimizer as OPT
+
+                state = OPT.AdamWState(step=o["step"], moments=o["moments"])
+                new_p, new_s, metrics = step(p, state, b)
+                return new_p, {"step": new_s.step, "moments": new_s.moments}, metrics["loss"]
+
+            jitted = jax.jit(fn, in_shardings=(pshard, oshard, bshard), donate_argnums=(0, 1))
+            lowered = jitted.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            def fn(p, b):
+                return T.prefill(p, cfg, b, cache_len=shape.seq_len)
+
+            jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            state_shapes = jax.eval_shape(
+                lambda: T.init_decode_state(
+                    cfg, shape.global_batch, cache_len=shape.seq_len,
+                    dtype=jnp.bfloat16, enc_len=cfg.n_frontend_tokens,
+                )
+            )
+            cspecs = T.cache_specs(cfg)
+            cshard = sh.tree_shardings(cspecs, mesh, rules)
+
+            def fn(p, t, s):
+                return T.decode_step(p, cfg, t, s)
+
+            jitted = jax.jit(
+                fn, in_shardings=(pshard, bshard["tokens"], cshard), donate_argnums=(2,)
+            )
+            lowered = jitted.lower(params, batch["tokens"], state_shapes)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    from repro.launch.hlo_analysis import collective_bytes
+
+    coll = collective_bytes(hlo_text)
+    # persist the compiled HLO so roofline analysis can evolve offline
+    import gzip
+
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    hlo_path = cell_path(arch, shape_name, multi_pod).replace(".json", ".hlo.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(hlo_text)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "status": "ok",
+        "kind": shape.kind,
+        "n_params": n_params,
+        "rules": {k: (list(v) if isinstance(v, tuple) else v) for k, v in rules.items()},
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return report
+
+
+def cell_path(arch, shape_name, multi_pod):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(REPORT_DIR, f"{arch}__{shape_name}__{mesh}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", default="both", choices=["both", "single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"both": [False, True], "single": [False], "multi": [True]}[args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                path = cell_path(arch, shape_name, mp)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        r = json.load(f)
+                    print(f"[cached] {arch} {shape_name} {'multi' if mp else 'single'}: {r['status']}")
+                    continue
+                label = f"{arch} {shape_name} {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = lower_cell(arch, shape_name, mp)
+                except Exception as e:  # a failing cell is a bug: record + continue
+                    r = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                    failures.append(label)
+                with open(path, "w") as f:
+                    json.dump(r, f, indent=1)
+                if r["status"] == "ok":
+                    print(f"[ok] {label}: {r['flops']:.3e} flops, "
+                          f"{r['memory']['temp_bytes']/2**30:.2f} GiB temp/dev, "
+                          f"compile {r['compile_s']}s")
+                elif r["status"] == "skipped":
+                    print(f"[skip] {label}: {r['reason']}")
+                else:
+                    print(f"[FAIL] {label}: {r['error']}")
+    if failures:
+        print(f"\n{len(failures)} FAILING CELLS:")
+        for f_ in failures:
+            print(" -", f_)
+        raise SystemExit(1)
+    print("\nall requested cells green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Post-SPMD HLO analysis: collective traffic with loop-trip-count scaling.
+
+XLA's ``cost_analysis``/text view count a ``while`` body **once**, but our
+layer stacks are scans — a collective inside the body runs L times.  This
+module parses the compiled HLO into computations, recovers each while
+loop's trip count from its condition's comparison constant, propagates
+multipliers down the call graph, and sums collective payload bytes × trips.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(typed: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE.findall(typed):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name → its lines (HLO text format).
+
+    Headers look like ``%name (args...) -> type {`` (args may nest parens)
+    or ``ENTRY %name ... {``; bodies end at a line starting with ``}``.
+    """
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        m = re.match(r"\s*(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", line)
+        if m and stripped.endswith("{") and "->" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip().startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _find_calls(lines: list[str]) -> list[tuple[str, str]]:
+    """(kind, callee) for while/call/fusion/conditional references."""
+    out = []
+    for line in lines:
+        for key in ("body=", "condition=", "to_apply=", "called_computations={"):
+            for m in re.finditer(re.escape(key) + r"\{?%?([\w\.\-]+)", line):
+                kind = "while_body" if key == "body=" else "other"
+                if "while(" in line and key == "body=":
+                    kind = "while_body"
+                out.append((kind if "while(" in line else "other", m.group(1)))
+    return out
+
+
+def _while_trip_count(cond_lines: list[str]) -> int:
+    """Largest s32 constant compared in the condition ≈ trip count."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line and ("s32" in line or "u32" in line):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Collective payload bytes by kind, scaled by enclosing loop trips."""
+    comps = split_computations(hlo)
+
+    # multiplier per computation from the call graph
+    mult: dict[str, float] = {}
+    entry = None
+    for name in comps:
+        if name in ("main", "main.1") or entry is None:
+            entry = entry or name
+    # find the real entry: computation not referenced by others
+    referenced = set()
+    calls: dict[str, list[tuple[str, str, int]]] = {}
+    for name, lines in comps.items():
+        cl = []
+        for line in lines:
+            if "while(" in line:
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = _while_trip_count(comps.get(cond.group(1), [])) if cond else 1
+                if body:
+                    cl.append(("while", body.group(1), trips))
+                    referenced.add(body.group(1))
+                if cond:
+                    referenced.add(cond.group(1))
+            else:
+                for m in re.finditer(r"(?:to_apply=|calls=)%?([\w\.\-]+)", line):
+                    cl.append(("call", m.group(1), 1))
+                    referenced.add(m.group(1))
+                for m in re.finditer(r"called_computations=\{([^}]*)\}", line):
+                    for callee in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+                        cl.append(("call", callee, 1))
+                        referenced.add(callee)
+        calls[name] = cl
+    roots = [n for n in comps if n not in referenced]
+
+    def visit(name: str, m: float):
+        mult[name] = mult.get(name, 0.0) + m
+        for kind, callee, trips in calls.get(name, []):
+            if callee in comps:
+                visit(callee, m * (trips if kind == "while" else 1))
+
+    for r in roots:
+        visit(r, 1.0)
+
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1]
+            for kind in COLLECTIVES:
+                # op application is `<shape> kind(` on the rhs; `-done` is the
+                # paired completion of `-start` — count the payload once
+                app = re.search(rf"\s{kind}(?:-start)?\(", rhs)
+                if app:
+                    out[kind] += _shape_bytes(rhs[: app.start()]) * m
+                    break
+    return {k: v for k, v in out.items() if v}
+
+
+def flops_scaled(hlo: str, raw_flops: float) -> float:
+    """No per-computation flop split is available from cost_analysis; kept
+    for API symmetry — roofline uses analytic flops (benchmarks/roofline)."""
+    return raw_flops

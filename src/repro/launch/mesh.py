@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips (v5e-256-like), axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
+rides DCN; gradient all-reduce over it is the compressed axis
+(parallel/compression.py).
+
+Defined as functions (never module-level) so importing this module touches
+no jax device state; the dry-run overrides the platform device count before
+any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device host tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

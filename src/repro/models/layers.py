@@ -1,0 +1,464 @@
+"""Core layers in pure JAX: norms, rotary, attention (GQA + MLA), MLP.
+
+Conventions:
+* every ``init_*`` returns ``(params, specs)`` — twin pytrees, specs holding
+  tuples of *logical* axis names consumed by parallel/sharding.py;
+* activations run in ``cfg.dtype`` (bf16 on TPU), softmax statistics and
+  norm reductions in fp32; params in ``cfg.param_dtype``;
+* attention never materializes S×S: the jnp flash (double-scan online
+  softmax) is the default trainable path, kernels/flash_attention is the
+  TPU serving kernel.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain, current_mesh, current_rules
+
+
+def dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --- abstract construction mode -------------------------------------------
+# The dry-run lowers full-scale models without allocating a single weight:
+# under `abstract_params()` every initializer returns a ShapeDtypeStruct.
+_ABSTRACT = False
+
+
+@contextlib.contextmanager
+def abstract_params():
+    global _ABSTRACT
+    prev, _ABSTRACT = _ABSTRACT, True
+    try:
+        yield
+    finally:
+        _ABSTRACT = prev
+
+
+def normal(key, shape, dtype, scale=0.02):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def ones(shape, dtype):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.ones(shape, dtype)
+
+
+def zeros(shape, dtype):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def const(fn, shape, dtype):
+    """Value-initialized param (e.g. A_log) that is shape-only when abstract."""
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return fn().astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def stacked(stack: tuple, spec_tree):
+    """Prepend 'layers' (replicated) axes to every spec tuple for stacking."""
+    pre = ("layers",) * len(stack)
+    return jax.tree_util.tree_map(
+        lambda s: pre + s, spec_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def init_rmsnorm(d, cfg, stack: tuple = ()):
+    return ones(stack + (d,), pdt(cfg)), ("layers",) * len(stack) + ("embed",)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    """fp32 accumulation for the variance, bf16 elementwise path.
+
+    Keeping the [B,S,D]-sized tensors in the input dtype matters for
+    distribution: the fp32 variant pushes fp32 *cotangents* of the residual
+    stream through the TP all-reduces (measured ≈2× collective bytes on
+    llama3-405b train — EXPERIMENTS.md §Perf iteration 3)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def init_layernorm(d, cfg, stack: tuple = ()):
+    p = {"scale": ones(stack + (d,), pdt(cfg)), "bias": zeros(stack + (d,), pdt(cfg))}
+    s = stacked(stack, {"scale": ("embed",), "bias": ("embed",)})
+    return p, s
+
+
+def layernorm(x, p, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * p["scale"].astype(x.dtype)) + p["bias"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, d] with d even; positions [S] or broadcastable [..., S]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # [..., S, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode-time contraction parallelism
+# ---------------------------------------------------------------------------
+
+
+def _fsdp_shards() -> int:
+    mesh, rules = current_mesh(), current_rules()
+    ax = rules.get("fsdp") if mesh is not None else None
+    if not ax:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def proj(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """``einsum('bsd,d...->bs...')`` that, at decode (S==1), exposes the
+    FSDP shard dim of the contraction so SPMD computes shard-local partial
+    products + an activation-sized psum instead of all-gathering the weight
+    (a 405B model otherwise moves ~100 GiB of weights per decoded token —
+    EXPERIMENTS.md §Perf cell 3)."""
+    k = _fsdp_shards()
+    D = x.shape[-1]
+    if x.shape[1] != 1 or k <= 1 or D % k:
+        return jnp.einsum("bsd,d...->bs...", x, w)
+    B = x.shape[0]
+    xr = constrain(x.reshape(B, 1, k, D // k), None, None, "fsdp", None)
+    wr = w.reshape((k, D // k) + w.shape[1:])
+    return jnp.einsum("bskd,kd...->bs...", xr, wr)
+
+
+# ---------------------------------------------------------------------------
+# flash attention, pure-jnp (trainable; O(S·block) memory)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,  # [B,Hq,Sq,dh]
+    k: jnp.ndarray,  # [B,Hkv,Skv,dh]
+    v: jnp.ndarray,  # [B,Hkv,Skv,dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    B, Hq, Sq, dh = q.shape
+    Hkv, Skv, dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = dh**-0.5 if scale is None else scale
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    sq_pad = -(-Sq // bq) * bq
+    skv_pad = -(-Skv // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+    nq, nk = sq_pad // bq, skv_pad // bk
+
+    # Pin batch/head shardings on every blocked view: GSPMD's propagation
+    # loses the batch sharding through the map/scan reshapes and falls back
+    # to full all-gathers of q/k per block (measured ~50 TiB/step on
+    # deepseek-v2 train before these constraints — EXPERIMENTS.md §Perf).
+    qg = qp.reshape(B, Hkv, G, nq, bq, dh).transpose(3, 0, 1, 2, 4, 5)  # [nq,B,Hkv,G,bq,dh]
+    qg = constrain(qg, None, "batch", "kv_heads", "q_per_kv", "attn_q", None)
+    kb = constrain(kp.reshape(B, Hkv, nk, bk, dh), "batch", "kv_heads", None, None, None)
+    vb = constrain(vp.reshape(B, Hkv, nk, bk, dv), "batch", "kv_heads", None, None, None)
+    offset = Skv - Sq  # decode/chunked-prefill alignment
+
+    def q_block(iq, qblk):
+        qpos = iq * bq + jnp.arange(bq) + offset  # [bq]
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kb, jk, axis=2, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, jk, axis=2, keepdims=False)
+            kblk = constrain(kblk, "batch", "kv_heads", None, None)
+            vblk = constrain(vblk, "batch", "kv_heads", None, None)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk, preferred_element_type=jnp.float32) * scale
+            s = constrain(s, "batch", "kv_heads", "q_per_kv", "attn_q", None)
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = jk * bk + jnp.arange(bk)
+            msk = (kpos < Skv)[None, :]
+            if causal:
+                msk = msk & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                msk = msk & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vblk, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = constrain(jnp.full((B, Hkv, G, bq), -1e30, jnp.float32), "batch", "kv_heads", "q_per_kv", "attn_q")
+        l0 = constrain(jnp.zeros((B, Hkv, G, bq), jnp.float32), "batch", "kv_heads", "q_per_kv", "attn_q")
+        a0 = constrain(jnp.zeros((B, Hkv, G, bq, dv), jnp.float32), "batch", "kv_heads", "q_per_kv", "attn_q", None)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return (acc / (l[..., None] + 1e-30)).astype(q.dtype)
+
+    if nq == 1:
+        out = q_block(jnp.int32(0), qg[0])[None]
+    else:
+        out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qg))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, sq_pad, dv)
+    return out[:, :, :Sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,      # [B,Hq,1,dh]
+    k_cache: jnp.ndarray,  # [B,Hkv,S,dh]
+    v_cache: jnp.ndarray,  # [B,Hkv,S,dv]
+    length_mask: jnp.ndarray,  # [B,S] bool — valid cache slots
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a (possibly rolling) cache."""
+    B, Hq, _, dh = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    scale = dh**-0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(length_mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, Hq, 1, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, stack: tuple = ()):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal(ks[0], stack + (D, H, hd), pdt(cfg)),
+        "wk": normal(ks[1], stack + (D, Hkv, hd), pdt(cfg)),
+        "wv": normal(ks[2], stack + (D, Hkv, hd), pdt(cfg)),
+        "wo": normal(ks[3], stack + (H, hd, D), pdt(cfg), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    s = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones(stack + (hd,), pdt(cfg))
+        p["k_norm"] = ones(stack + (hd,), pdt(cfg))
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return p, stacked(stack, s)
+
+
+def attention(
+    params,
+    x: jnp.ndarray,             # [B,S,D]
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,     # [S] (or [B,S])
+    window: Optional[int] = None,
+    cache: Optional[dict] = None,   # decode: {"k","v" [B,Hkv,C,dh], "pos" scalar}
+    causal: bool = True,
+    return_kv: bool = False,        # prefill: emit (k, v) for the decode cache
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    adt = x.dtype
+    q = proj(x, params["wq"].astype(adt)).transpose(0, 2, 1, 3)
+    k = proj(x, params["wk"].astype(adt)).transpose(0, 2, 1, 3)
+    v = proj(x, params["wv"].astype(adt)).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", None, None)
+
+    if cache is None:
+        o = flash_attention_jnp(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap
+        )
+        new_cache = (k, v) if return_kv else None
+    else:
+        # rolling ring buffer: capacity C == window for local layers, full
+        # sequence length for global layers; slot = pos % C covers both.
+        C = cache["k"].shape[2]
+        pos = cache["pos"]
+        slot = pos % C
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        idx = jnp.arange(C)
+        valid = (idx <= pos) | (pos >= C)  # partial fill → prefix; full ring → all
+        mask = jnp.broadcast_to(valid[None], (x.shape[0], C))
+        o = decode_attention(q, k_cache, v_cache, mask, softcap=cfg.attn_softcap)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(adt), params["wo"].astype(adt))
+    if x.shape[1] == 1 and _fsdp_shards() > 1:
+        out = constrain(out, None, None, "fsdp")  # see mlp decode note
+    return constrain(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, stack: tuple = ()):
+    D, H = cfg.d_model, cfg.n_heads
+    nq, nr, dv, r_kv, r_q = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq_a": normal(ks[0], stack + (D, r_q), pdt(cfg)),
+        "q_norm": ones(stack + (r_q,), pdt(cfg)),
+        "wq_b": normal(ks[1], stack + (r_q, H, nq + nr), pdt(cfg)),
+        "wkv_a": normal(ks[2], stack + (D, r_kv + nr), pdt(cfg)),
+        "kv_norm": ones(stack + (r_kv,), pdt(cfg)),
+        "wk_b": normal(ks[3], stack + (r_kv, H, nq), pdt(cfg)),
+        "wv_b": normal(ks[4], stack + (r_kv, H, dv), pdt(cfg)),
+        "wo": normal(ks[5], stack + (H, dv, D), pdt(cfg), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    s = {
+        "wq_a": ("fsdp", None),
+        "q_norm": (None,),
+        "wq_b": (None, "heads", None),
+        "wkv_a": ("fsdp", None),
+        "kv_norm": (None,),
+        "wk_b": (None, "heads", None),
+        "wv_b": (None, "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    return p, stacked(stack, s)
+
+
+def mla_attention(
+    params, x, cfg: ModelConfig, *, positions, cache=None, return_kv: bool = False
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    adt = x.dtype
+    H, nq, nr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (nq + nr) ** -0.5
+
+    qa = rmsnorm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(adt)), params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bhsk", qa, params["wq_b"].astype(adt))  # [B,H,S,nq+nr]
+    q_nope, q_rope = q[..., :nq], q[..., nq:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(adt))  # [B,S,r_kv+nr]
+    c_kv = rmsnorm(kv[..., : cfg.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., None, cfg.kv_lora_rank :].swapaxes(1, 2), positions, cfg.rope_theta)  # [B,1,S,nr]
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wk_b"].astype(adt))
+        v = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wv_b"].astype(adt))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (nr,))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        o = flash_attention_jnp(qq, k, v, causal=True, scale=scale)
+        new_cache = (c_kv, k_rope[:, 0]) if return_kv else None
+    else:
+        # absorbed decode: score via latent space, never expand K/V
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0))
+        kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, 0], (0, pos, 0))
+        q_c = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["wk_b"].astype(adt))  # [B,H,1,r]
+        s_c = jnp.einsum("bhsr,btr->bhst", q_c, ck)
+        s_r = jnp.einsum("bhsk,btk->bhst", q_rope, kr)
+        s = (s_c + s_r).astype(jnp.float32) * scale
+        valid = jnp.arange(ck.shape[1]) <= pos
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(adt)
+        o_lat = jnp.einsum("bhst,btr->bhsr", p, ck)
+        o = jnp.einsum("bhsr,rhk->bhsk", o_lat, params["wv_b"].astype(adt))
+        new_cache = {"c_kv": ck, "k_rope": kr, "pos": pos + 1}
+
+    out = jnp.einsum("bhsk,hkd->bsd", o.astype(adt), params["wo"].astype(adt))
+    return constrain(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, stack: tuple = ()):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        p = {"w1": normal(ks[0], stack + (D, F), pdt(cfg)), "w2": normal(ks[1], stack + (F, D), pdt(cfg))}
+        s = {"w1": ("fsdp", "mlp"), "w2": ("mlp", "fsdp")}
+    else:
+        p = {
+            "w1": normal(ks[0], stack + (D, F), pdt(cfg)),
+            "w3": normal(ks[1], stack + (D, F), pdt(cfg)),
+            "w2": normal(ks[2], stack + (F, D), pdt(cfg), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+        }
+        s = {"w1": ("fsdp", "mlp"), "w3": ("fsdp", "mlp"), "w2": ("mlp", "fsdp")}
+    return p, stacked(stack, s)
+
+
+def mlp(params, x, cfg: ModelConfig):
+    adt = x.dtype
+    if "w3" in params:
+        h = jax.nn.silu(proj(x, params["w1"].astype(adt))) * proj(x, params["w3"].astype(adt))
+    else:
+        h = jax.nn.gelu(proj(x, params["w1"].astype(adt)))
+    h = constrain(h, "batch", None, "mlp")
+    y = h @ params["w2"].astype(adt)
+    if x.shape[1] == 1 and _fsdp_shards() > 1:
+        # decode: keep the output D-sharded over data (w2 stays resident;
+        # replication happens on the tiny activation, not the weight)
+        y = constrain(y, None, None, "fsdp")
+    return x_out(y)
+
+
+def x_out(y):
+    return constrain(y, "batch", None, None)

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: sort-based dispatch with static per-expert
+capacity (dropless when capacity_factor covers the imbalance).
+
+Dataflow (all static shapes, GSPMD turns the dispatch/combine gathers into
+all-to-alls when experts are sharded over the ``model`` axis):
+
+  router logits → top-k → flatten (token, expert, gate) triples
+  → argsort by expert → position-within-expert via searchsorted
+  → dispatch into [E, C, D] → batched expert GEMMs → weighted combine.
+
+Shared experts (DeepSeek) are a dense branch added to the routed output.
+Returns an auxiliary load-balancing loss (Switch/GShard form).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import normal, pdt, stacked
+from repro.parallel.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig, stack: tuple = ()):
+    D, F, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal(ks[0], stack + (D, E), pdt(cfg)),
+        "w1": normal(ks[1], stack + (E, D, F), pdt(cfg)),
+        "w3": normal(ks[2], stack + (E, D, F), pdt(cfg)),
+        "w2": normal(ks[3], stack + (E, F, D), pdt(cfg), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    s = {
+        "router": (None, None),
+        "w1": ("experts", "fsdp", "moe_mlp"),
+        "w3": ("experts", "fsdp", "moe_mlp"),
+        "w2": ("experts", "moe_mlp", "fsdp"),
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["shared"] = {
+            "w1": normal(ks[4], stack + (D, Fs), pdt(cfg)),
+            "w3": normal(jax.random.fold_in(ks[4], 1), stack + (D, Fs), pdt(cfg)),
+            "w2": normal(jax.random.fold_in(ks[4], 2), stack + (Fs, D), pdt(cfg)),
+        }
+        s["shared"] = {"w1": ("fsdp", "mlp"), "w3": ("fsdp", "mlp"), "w2": ("mlp", "fsdp")}
+    return p, stacked(stack, s)
+
+
+def moe(
+    params, x: jnp.ndarray, cfg: ModelConfig, *, full_capacity: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] → (y [B,S,D], aux_loss scalar).
+
+    ``full_capacity=True`` (decode path) sets per-expert capacity to the
+    token count — strictly dropless, exactly matching the dense routing a
+    serving system requires.
+    """
+    adt = x.dtype
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    # GShard-style grouped dispatch: routing/sort/scatter stay *local* to a
+    # data-parallel shard group.  A single global argsort over B·S·K entries
+    # would force GSPMD to replicate the dispatch tensors (~E·C·D bytes)
+    # per device — measured at ~10² TiB collective traffic per step on
+    # deepseek-v2 before this (EXPERIMENTS.md §Perf, iteration 1).
+    G = _n_token_groups(B)
+    Tg = T // G
+    xf = x.reshape(G, Tg, D)
+    xf = constrain(xf, "expert_cap", None, None)  # groups ride the batch axes
+
+    logits = (xf @ params["router"].astype(adt)).astype(jnp.float32)  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    if cfg.router_norm == "topk_softmax":      # mixtral: softmax over selected
+        top_logits, top_idx = jax.lax.top_k(logits, K)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    else:                                       # deepseek: select from softmax
+        top_probs, top_idx = jax.lax.top_k(probs, K)
+        gates = top_probs / (top_probs.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch): E · Σ_e f_e · P_e
+    me = probs.mean(axis=(0, 1))                                  # [E]
+    one_hot_top = jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32)
+    ce = one_hot_top.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    C = Tg if full_capacity else max(1, int(Tg * K / E * cfg.capacity_factor))
+
+    flat_e = top_idx.reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K))
+    flat_g = gates.reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=1)                           # per-group sort
+    se = jnp.take_along_axis(flat_e, order, 1)
+    st_ = jnp.take_along_axis(flat_t, order, 1)
+    sg = jnp.take_along_axis(flat_g, order, 1)
+    start = jax.vmap(lambda s: jnp.searchsorted(s, jnp.arange(E)))(se)  # [G,E]
+    pos = jnp.arange(Tg * K)[None] - jnp.take_along_axis(start, se, 1)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                   # overflow bin
+
+    token_rows = jnp.take_along_axis(xf, st_[..., None], 1)       # [G,Tg*K,D]
+    disp = jnp.zeros((G, E * C + 1, D), adt)
+    disp = jax.vmap(lambda d, s, t: d.at[s].set(t))(disp, slot, token_rows * keep[..., None].astype(adt))
+    xe = disp[:, : E * C].reshape(G, E, C, D)
+    xe = constrain(xe, "expert_cap", "experts", None, None)
+
+    from repro.models.layers import _fsdp_shards
+
+    kshard = _fsdp_shards()
+    if full_capacity and kshard > 1 and D % kshard == 0:
+        # decode: expose the FSDP shard dim of the contraction so the expert
+        # weights stay resident (weight-stationary partial sums — the MoE
+        # analogue of layers.proj; §Perf: 17 GiB/step of expert gathers on
+        # multi-pod deepseek decode without this)
+        F = params["w1"].shape[-1]
+        xe_r = constrain(
+            xe.reshape(G, E, C, kshard, D // kshard),
+            "expert_cap", "experts", None, "fsdp", None,
+        )
+        w1r = params["w1"].astype(adt).reshape(E, kshard, D // kshard, F)
+        w3r = params["w3"].astype(adt).reshape(E, kshard, D // kshard, F)
+        h = jax.nn.silu(jnp.einsum("geckd,ekdf->gecf", xe_r, w1r))
+        h = h * jnp.einsum("geckd,ekdf->gecf", xe_r, w3r)
+        h = constrain(h, "expert_cap", "experts", None, "moe_mlp")
+        ye = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(adt))
+        ye = constrain(ye, "expert_cap", "experts", None, "fsdp")
+    else:
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w1"].astype(adt)))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, params["w3"].astype(adt))
+        h = constrain(h, "expert_cap", "experts", None, "moe_mlp")
+        ye = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(adt))
+        ye = constrain(ye, "expert_cap", "experts", None, None)
+
+    flat_ye = ye.reshape(G, E * C, D)
+    gathered = jax.vmap(lambda y, s: y[jnp.clip(s, 0, E * C - 1)])(flat_ye, slot)
+    contrib = gathered * (sg * keep).astype(adt)[..., None]
+    yf = jnp.zeros((G, Tg, D), adt)
+    yf = jax.vmap(lambda y, t, c: y.at[t].add(c))(yf, st_, contrib)
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(xf @ sh["w1"].astype(adt)) * (xf @ sh["w3"].astype(adt))
+        yf = yf + hs @ sh["w2"].astype(adt)
+
+    return constrain(yf.reshape(B, S, D), "batch", None, None), aux
+
+
+def _n_token_groups(batch: int) -> int:
+    """Routing groups = data-parallel shard count of the batch axis (so every
+    group's sort/scatter is shard-local); 1 without a mesh (tests)."""
+    from repro.parallel.sharding import current_mesh, current_rules
+
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = current_rules().get("batch") or ()
+    axes = (axes,) if isinstance(axes, str) else axes
+    g = 1
+    for a in axes:
+        g *= sizes.get(a, 1)
+    return g if batch % g == 0 else 1
+
+
+def tokens_dropped_fraction(logits: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Diagnostic: fraction of routed assignments beyond capacity."""
+    T, E = logits.shape[0], cfg.n_experts
+    K = cfg.top_k
+    _, top_idx = jax.lax.top_k(logits, K)
+    counts = jnp.bincount(top_idx.reshape(-1), length=E)
+    C = max(1, int(T * K / E * cfg.capacity_factor))
+    return jnp.maximum(counts - C, 0).sum() / (T * K)

@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm for training/prefill (quadratic within chunks of
+length Q, linear across chunks via an associative decay recurrence) and the
+O(1)-state recurrent step for decode.  Layout follows the reference:
+``in_proj → [z | xBC | dt]``, short causal conv over xBC, SSD core, gated
+RMSNorm, ``out_proj``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import const, normal, ones, pdt, rmsnorm, stacked, zeros
+from repro.parallel.sharding import constrain
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads, cfg.ssm_state, cfg.ssm_groups
+
+
+def init_mamba2(key, cfg: ModelConfig, stack: tuple = ()):
+    D = cfg.d_model
+    d_inner, H, N, G = dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+    ks = jax.random.split(key, 5)
+    bc = lambda a, sh: jnp.broadcast_to(a, sh)  # value init broadcast over stack
+    p = {
+        "in_proj": normal(ks[0], stack + (D, 2 * d_inner + 2 * G * N + H), pdt(cfg)),
+        "conv_w": normal(ks[1], stack + (cfg.d_conv, conv_dim), pdt(cfg), scale=0.5),
+        "conv_b": zeros(stack + (conv_dim,), pdt(cfg)),
+        "A_log": const(lambda: bc(jnp.log(jnp.linspace(1.0, 16.0, H)), stack + (H,)), stack + (H,), pdt(cfg)),
+        "D": ones(stack + (H,), pdt(cfg)),
+        "dt_bias": const(
+            lambda: bc(jnp.log(jnp.expm1(jnp.full((H,), 1e-2))), stack + (H,)), stack + (H,), pdt(cfg)
+        ),
+        "norm": ones(stack + (d_inner,), pdt(cfg)),
+        "out_proj": normal(ks[2], stack + (d_inner, D), pdt(cfg), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    s = {
+        "in_proj": ("fsdp", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("mlp",),
+        "out_proj": ("mlp", "fsdp"),
+    }
+    return p, stacked(stack, s)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """L[i,j] = Σ_{j<k≤i} a[k] (−inf above diagonal): log of decay products."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # [B,S,H,P]
+    dt: jnp.ndarray,   # [B,S,H]  (already softplus'd, >0)
+    A: jnp.ndarray,    # [H] (negative)
+    Bm: jnp.ndarray,   # [B,S,G,N]
+    Cm: jnp.ndarray,   # [B,S,G,N]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # [B,H,P,N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nC = Sp // Q
+    rep = H // G
+
+    xc = x.reshape(B, nC, Q, H, Pd)
+    dtc = dt.reshape(B, nC, Q, H)
+    Bc = Bm.reshape(B, nC, Q, G, N)
+    Cc = Cm.reshape(B, nC, Q, G, N)
+    a = dtc * A[None, None, None, :]            # log-decay per step [B,nC,Q,H]
+    a = a.astype(jnp.float32)
+
+    # --- intra-chunk (quadratic within Q)
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))          # [B,nC,H,Q,Q]
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)          # [B,nC,G,Q,Q]
+    CB = jnp.repeat(CB, rep, axis=2)                       # [B,nC,H,Q,Q]
+    dtx = xc * dtc[..., None]                              # fold Δ into x
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", (CB * L).astype(x.dtype), dtx)
+
+    # --- chunk states: contribution of each chunk to its end state
+    decay_to_end = jnp.exp(a.sum(axis=2, keepdims=True) - jnp.cumsum(a, axis=2))  # [B,nC,Q,H]
+    Bh = jnp.repeat(Bc, rep, axis=3)  # groups → heads [B,nC,Q,H,N]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end.astype(x.dtype), dtx)
+
+    # --- inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a.sum(axis=2))  # [B,nC,H]
+    s0 = jnp.zeros((B, H, Pd, N), x.dtype) if init_state is None else init_state
+
+    def step(s, inp):
+        dec, st = inp  # dec [B,H], st [B,H,P,N]
+        s_new = s * dec[..., None, None].astype(x.dtype) + st
+        return s_new, s
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nC,H,P,N] state entering chunk
+
+    # --- inter-chunk output: y += C · (decay_from_start ⊙ prev_state)
+    decay_from_start = jnp.exp(jnp.cumsum(a, axis=2))  # [B,nC,Q,H]
+    Ch = jnp.repeat(Cc, rep, axis=3)  # groups → heads [B,nC,Q,H,N]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, decay_from_start.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(B, Sp, H, Pd)[:, :S]
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,   # [B,1,H,P]
+    dt: jnp.ndarray,  # [B,1,H]
+    A: jnp.ndarray,   # [H]
+    Bm: jnp.ndarray,  # [B,1,G,N]
+    Cm: jnp.ndarray,  # [B,1,G,N]
+    state: jnp.ndarray,  # [B,H,P,N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    B, _, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    dec = jnp.exp(dt[:, 0, :] * A[None]).astype(x.dtype)          # [B,H]
+    Bh = jnp.repeat(Bm[:, 0], rep, axis=1)                         # [B,H,N]
+    Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+    dx = (x[:, 0] * dt[:, 0, :, None]).astype(x.dtype)             # [B,H,P]
+    new_state = state * dec[..., None, None] + jnp.einsum("bhp,bhn->bhpn", dx, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y[:, None], new_state
+
+
+def mamba2_block(
+    params, x: jnp.ndarray, cfg: ModelConfig, *, cache: Optional[dict] = None,
+    return_state: bool = False,
+) -> tuple[jnp.ndarray, Optional[dict]]:
+    """x [B,S,D] → y [B,S,D]. cache = {"ssm" [B,H,P,N], "conv" [B,d_conv-1,convdim]}."""
+    adt = x.dtype
+    B, S, D = x.shape
+    d_inner, H, N, G = dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+
+    zxbcdt = x @ params["in_proj"].astype(adt)  # [B,S, 2*d_inner + 2GN + H]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -H:]
+
+    # short causal conv over xBC (depthwise)
+    w = params["conv_w"].astype(adt)  # [d_conv, conv_dim]
+    K = w.shape[0]
+    if cache is None:
+        xpad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(xpad[:, i : i + S] * w[i][None, None] for i in range(K))
+        new_conv_state = None if S < K - 1 else xBC[:, S - (K - 1) :]
+    else:
+        hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # [B,K-1+1,convdim]
+        conv = sum(hist[:, i : i + 1] * w[i][None, None] for i in range(K))
+        new_conv_state = hist[:, 1:]
+    xBC = jax.nn.silu(conv + params["conv_b"].astype(adt))
+
+    xs = xBC[..., :d_inner].reshape(B, -1, H, cfg.ssm_headdim)
+    Bm = xBC[..., d_inner : d_inner + G * N].reshape(B, -1, G, N)
+    Cm = xBC[..., d_inner + G * N :].reshape(B, -1, G, N)
+    dt_a = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        y, final_state = ssd_chunked(xs, dt_a.astype(adt), A.astype(adt), Bm, Cm, cfg.ssm_chunk)
+        new_cache = {"ssm": final_state, "conv": new_conv_state} if return_state else None
+    else:
+        y, final_state = ssd_decode_step(xs, dt_a.astype(adt), A.astype(adt), Bm, Cm, cache["ssm"])
+        new_cache = {"ssm": final_state, "conv": new_conv_state}
+
+    y = y + xs * params["D"].astype(adt)[None, None, :, None]   # skip
+    y = y.reshape(B, -1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)  # gated norm
+    out = y @ params["out_proj"].astype(adt)
+    return constrain(out, "batch", None, None), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, H, N, G = dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_headdim, N), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,788 @@
+"""Composable transformer/SSM stack covering all ten assigned architectures.
+
+Layer stacks are *stacked pytrees* scanned with ``jax.lax.scan`` so the HLO
+stays one-layer-sized regardless of depth (essential for compiling 126-layer
+models on the dry-run host).  Heterogeneous depth patterns are expressed as
+nested stacks:
+
+  dense / moe          uniform stack [L, ...] (+ optional first-dense stack)
+  gemma2 local/global  pair stack [L/2, 2(sublayer), ...]
+  zamba2 hybrid        mamba groups [G, every, ...] + ONE shared attn block
+                       (weights shared, applied after each group) + remainder
+  whisper enc-dec      encoder stack + decoder stack with cross-attention
+
+``init_params(cfg, key) → (params, specs)``; under
+``layers.abstract_params()`` the same code yields ShapeDtypeStructs (the
+dry-run never allocates weights).
+
+Decode state is a pytree of per-stack caches; ``decode_step`` threads the
+cache through the same scans.  Sliding-window layers get ring-buffer caches
+of size ``window`` — this is what keeps mixtral/gemma2 long_500k feasible.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(cfg, d, stack):
+    return L.init_rmsnorm(d, cfg, stack) if cfg.act != "gelu" else L.init_layernorm(d, cfg, stack)
+
+
+def _norm_apply(cfg, x, p):
+    return L.rmsnorm(x, p, cfg.norm_eps) if cfg.act != "gelu" else L.layernorm(x, p, cfg.norm_eps)
+
+
+def _init_attn_block(key, cfg, stack, with_post=False):
+    k1, k2 = jax.random.split(key)
+    attn_init = L.init_mla if cfg.attn_type == "mla" else L.init_attention
+    p_attn, s_attn = attn_init(k1, cfg, stack)
+    p_mlp, s_mlp = L.init_mlp(k2, cfg, stack=stack)
+    np1, ns1 = _norm_init(cfg, cfg.d_model, stack)
+    np2, ns2 = _norm_init(cfg, cfg.d_model, stack)
+    p = {"attn": p_attn, "mlp": p_mlp, "ln1": np1, "ln2": np2}
+    s = {"attn": s_attn, "mlp": s_mlp, "ln1": ns1, "ln2": ns2}
+    if with_post:  # gemma2 post-norms
+        for name in ("post1", "post2"):
+            pp, ss = _norm_init(cfg, cfg.d_model, stack)
+            p[name], s[name] = pp, ss
+    return p, s
+
+
+def _init_moe_block(key, cfg, stack):
+    k1, k2 = jax.random.split(key)
+    attn_init = L.init_mla if cfg.attn_type == "mla" else L.init_attention
+    p_attn, s_attn = attn_init(k1, cfg, stack)
+    p_moe, s_moe = M.init_moe(k2, cfg, stack)
+    np1, ns1 = _norm_init(cfg, cfg.d_model, stack)
+    np2, ns2 = _norm_init(cfg, cfg.d_model, stack)
+    return (
+        {"attn": p_attn, "moe": p_moe, "ln1": np1, "ln2": np2},
+        {"attn": s_attn, "moe": s_moe, "ln1": ns1, "ln2": ns2},
+    )
+
+
+def _init_mamba_block(key, cfg, stack):
+    p_m, s_m = S.init_mamba2(key, cfg, stack)
+    np1, ns1 = _norm_init(cfg, cfg.d_model, stack)
+    return {"mamba": p_m, "ln": np1}, {"mamba": s_m, "ln": ns1}
+
+
+def _init_encdec_block(key, cfg, stack, cross: bool):
+    ks = jax.random.split(key, 3)
+    p_self, s_self = L.init_attention(ks[0], cfg, stack)
+    p_mlp, s_mlp = L.init_mlp(ks[1], cfg, stack=stack)
+    np1, ns1 = _norm_init(cfg, cfg.d_model, stack)
+    np2, ns2 = _norm_init(cfg, cfg.d_model, stack)
+    p = {"attn": p_self, "mlp": p_mlp, "ln1": np1, "ln2": np2}
+    s = {"attn": s_self, "mlp": s_mlp, "ln1": ns1, "ln2": ns2}
+    if cross:
+        p_x, s_x = L.init_attention(ks[2], cfg, stack)
+        npx, nsx = _norm_init(cfg, cfg.d_model, stack)
+        p["xattn"], s["xattn"] = p_x, s_x
+        p["lnx"], s["lnx"] = npx, nsx
+    return p, s
+
+
+def zamba_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, remainder) for the hybrid pattern."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+def init_params(cfg: ModelConfig, key) -> tuple[Any, Any]:
+    ks = jax.random.split(key, 8)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: dict[str, Any] = {"embed": L.normal(ks[0], (V, D), L.pdt(cfg))}
+    specs: dict[str, Any] = {"embed": ("vocab", "fsdp")}
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            half = cfg.n_layers // 2
+            p, s = _init_attn_block(ks[1], cfg, (half, 2), with_post=True)
+        else:
+            p, s = _init_attn_block(ks[1], cfg, (cfg.n_layers,))
+        params["layers"], specs["layers"] = p, s
+        if fam == "vlm":
+            params["patch_proj"] = L.normal(ks[2], (D, D), L.pdt(cfg))
+            specs["patch_proj"] = ("fsdp", None)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            p, s = _init_attn_block(ks[2], cfg, (nd,))
+            params["dense_layers"], specs["dense_layers"] = p, s
+        p, s = _init_moe_block(ks[1], cfg, (cfg.n_layers - nd,))
+        params["layers"], specs["layers"] = p, s
+    elif fam == "ssm":
+        p, s = _init_mamba_block(ks[1], cfg, (cfg.n_layers,))
+        params["layers"], specs["layers"] = p, s
+    elif fam == "hybrid":
+        ngrp, gsz, rem = zamba_layout(cfg)
+        p, s = _init_mamba_block(ks[1], cfg, (ngrp, gsz))
+        params["groups"], specs["groups"] = p, s
+        p, s = _init_attn_block(ks[2], cfg, ())  # shared weights (one copy)
+        params["shared_attn"], specs["shared_attn"] = p, s
+        if rem:
+            p, s = _init_mamba_block(ks[3], cfg, (rem,))
+            params["remainder"], specs["remainder"] = p, s
+    elif fam == "encdec":
+        p, s = _init_encdec_block(ks[1], cfg, (cfg.encoder_layers,), cross=False)
+        params["encoder"], specs["encoder"] = p, s
+        p, s = _init_encdec_block(ks[2], cfg, (cfg.n_layers,), cross=True)
+        params["layers"], specs["layers"] = p, s
+        pe, se = _norm_init(cfg, D, ())
+        params["enc_norm"], specs["enc_norm"] = pe, se
+    else:
+        raise ValueError(fam)
+
+    pn, sn = _norm_init(cfg, D, ())
+    params["final_norm"], specs["final_norm"] = pn, sn
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.normal(ks[4], (D, V), L.pdt(cfg))
+        specs["lm_head"] = ("fsdp", "vocab")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# block applications (shared by forward and decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_block(p, x, cfg, *, positions, window, cache=None, causal=True):
+    h = _norm_apply(cfg, x, p["ln1"])
+    attn_fn = L.mla_attention if cfg.attn_type == "mla" else L.attention
+    if cfg.attn_type == "mla":
+        a, new_cache = attn_fn(p["attn"], h, cfg, positions=positions, cache=cache)
+    else:
+        a, new_cache = attn_fn(
+            p["attn"], h, cfg, positions=positions, window=window, cache=cache, causal=causal
+        )
+    if "post1" in p:
+        a = _norm_apply(cfg, a, p["post1"])
+    x = x + a
+    h = _norm_apply(cfg, x, p["ln2"])
+    m = L.mlp(p["mlp"], h, cfg)
+    if "post2" in p:
+        m = _norm_apply(cfg, m, p["post2"])
+    return x + m, new_cache
+
+
+def _apply_moe_block(p, x, cfg, *, positions, cache=None):
+    h = _norm_apply(cfg, x, p["ln1"])
+    attn_fn = L.mla_attention if cfg.attn_type == "mla" else L.attention
+    if cfg.attn_type == "mla":
+        a, new_cache = attn_fn(p["attn"], h, cfg, positions=positions, cache=cache)
+    else:
+        a, new_cache = attn_fn(
+            p["attn"], h, cfg, positions=positions, window=cfg.window, cache=cache
+        )
+    x = x + a
+    h = _norm_apply(cfg, x, p["ln2"])
+    y, aux = M.moe(p["moe"], h, cfg, full_capacity=cache is not None)
+    return x + y, new_cache, aux
+
+
+def _apply_mamba_block(p, x, cfg, *, cache=None):
+    h = _norm_apply(cfg, x, p["ln"])
+    y, new_cache = S.mamba2_block(p["mamba"], h, cfg, cache=cache)
+    return x + y, new_cache
+
+
+def _apply_xattn_block(p, x, enc_out, cfg, *, positions, cache=None, xcache=None):
+    """Decoder block with cross attention (whisper)."""
+    h = _norm_apply(cfg, x, p["ln1"])
+    a, new_cache = L.attention(p["attn"], h, cfg, positions=positions, cache=cache)
+    x = x + a
+    h = _norm_apply(cfg, x, p["lnx"])
+    a, _ = _cross_attention(p["xattn"], h, enc_out, cfg, xcache=xcache)
+    x = x + a
+    h = _norm_apply(cfg, x, p["ln2"])
+    return x + L.mlp(p["mlp"], h, cfg), new_cache
+
+
+def _cross_attention(p, x, enc_out, cfg, xcache=None):
+    """Q from decoder, K/V from encoder output (no positions, no causality)."""
+    adt = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(adt))
+    if xcache is not None:
+        k, v = xcache["k"], xcache["v"]
+    else:
+        k = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk"].astype(adt))
+        v = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv"].astype(adt))
+    o = L.flash_attention_jnp(q, k, v, causal=False, softcap=cfg.attn_softcap)
+    return jnp.einsum("bhsk,hkd->bsd", o.astype(adt), p["wo"].astype(adt)), None
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens):
+    x = params["embed"].astype(L.dt(cfg))[tokens]
+    if cfg.local_global:  # gemma2 scales embeddings by √d
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return constrain(x, "batch", None, None)
+
+
+def _unembed(params, cfg, x):
+    x = _norm_apply(cfg, x, params["final_norm"])
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ table.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _scan_stack(body, x, stacked_params, remat: bool = True):
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(body, x, stacked_params)
+    return x, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: dict[str, jnp.ndarray],
+    *,
+    remat: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """→ (logits [B,S,V] fp32, aux_loss scalar). batch: tokens [+frames|patches]."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm" and "patches" in batch:
+        pat = batch["patches"].astype(L.dt(cfg)) @ params["patch_proj"].astype(L.dt(cfg))
+        x = jnp.concatenate([pat, _embed(params, cfg, tokens)], axis=1)
+    else:
+        x = _embed(params, cfg, tokens)
+    Sq = x.shape[1]
+    positions = jnp.arange(Sq)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        frames = batch["frames"].astype(L.dt(cfg))
+        e = frames
+        epos = jnp.arange(e.shape[1])
+
+        def enc_body(h, lp):
+            h, _ = _apply_attn_block(lp, h, cfg, positions=epos, window=None, causal=False)
+            return h, None
+
+        e, _ = _scan_stack(enc_body, e, params["encoder"], remat)
+        enc_out = _norm_apply(cfg, e, params["enc_norm"])
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            def pair_body(h, lp):
+                sub0 = jax.tree_util.tree_map(lambda a: a[0], lp)
+                sub1 = jax.tree_util.tree_map(lambda a: a[1], lp)
+                h, _ = _apply_attn_block(sub0, h, cfg, positions=positions, window=cfg.window or 4096)
+                h, _ = _apply_attn_block(sub1, h, cfg, positions=positions, window=None)
+                h = constrain(h, "batch", "act_seq", None)
+                h = checkpoint_name(h, "decoder_layer")
+                return h, None
+
+            x, _ = _scan_stack(pair_body, x, params["layers"], remat)
+        else:
+            def body(h, lp):
+                h, _ = _apply_attn_block(lp, h, cfg, positions=positions, window=cfg.window)
+                h = constrain(h, "batch", "act_seq", None)
+                h = checkpoint_name(h, "decoder_layer")
+                return h, None
+
+            x, _ = _scan_stack(body, x, params["layers"], remat)
+    elif fam == "moe":
+        if "dense_layers" in params:
+            def dbody(h, lp):
+                h, _ = _apply_attn_block(lp, h, cfg, positions=positions, window=cfg.window)
+                return h, None
+
+            x, _ = _scan_stack(dbody, x, params["dense_layers"], remat)
+
+        def mbody(h, lp):
+            h, _, aux = _apply_moe_block(lp, h, cfg, positions=positions)
+            h = constrain(h, "batch", "act_seq", None)
+            h = checkpoint_name(h, "decoder_layer")
+            return h, aux
+
+        x, auxes = _scan_stack(mbody, x, params["layers"], remat)
+        aux_total = aux_total + auxes.sum()
+    elif fam == "ssm":
+        def sbody(h, lp):
+            h, _ = _apply_mamba_block(lp, h, cfg)
+            h = constrain(h, "batch", "act_seq", None)
+            h = checkpoint_name(h, "decoder_layer")
+            return h, None
+
+        x, _ = _scan_stack(sbody, x, params["layers"], remat)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def gbody(h, lp):
+            def inner(h2, lp2):
+                h2, _ = _apply_mamba_block(lp2, h2, cfg)
+                return h2, None
+
+            h, _ = jax.lax.scan(inner, h, lp)
+            h, _ = _apply_attn_block(shared, h, cfg, positions=positions, window=cfg.window)
+            h = constrain(h, "batch", "act_seq", None)
+            h = checkpoint_name(h, "decoder_layer")
+            return h, None
+
+        x, _ = _scan_stack(gbody, x, params["groups"], remat)
+        if "remainder" in params:
+            def rbody(h, lp):
+                h, _ = _apply_mamba_block(lp, h, cfg)
+                return h, None
+
+            x, _ = _scan_stack(rbody, x, params["remainder"], remat)
+    elif fam == "encdec":
+        def xbody(h, lp):
+            h = _apply_xattn_block(lp, h, enc_out, cfg, positions=positions)[0]
+            h = constrain(h, "batch", "act_seq", None)
+            h = checkpoint_name(h, "decoder_layer")
+            return h, None
+
+        x, _ = _scan_stack(xbody, x, params["layers"], remat)
+
+    return _unembed(params, cfg, x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _kv_cache(cfg, stack, B, C, dtype):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros(stack + (B, cfg.n_kv_heads, C, hd), dtype),
+        "v": jnp.zeros(stack + (B, cfg.n_kv_heads, C, hd), dtype),
+    }
+
+
+def init_decode_state(cfg: ModelConfig, B: int, cache_len: int, dtype=jnp.bfloat16, enc_len: int = 0):
+    """Caches sized for a decode run of ``cache_len`` total positions."""
+    st: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    w = cfg.window
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            half = cfg.n_layers // 2
+            st["local"] = _kv_cache(cfg, (half,), B, min(cache_len, w or 4096), dtype)
+            st["global"] = _kv_cache(cfg, (half,), B, cache_len, dtype)
+        else:
+            C = min(cache_len, w) if w else cache_len
+            st["layers"] = _kv_cache(cfg, (cfg.n_layers,), B, C, dtype)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        C = min(cache_len, w) if w else cache_len
+        if cfg.attn_type == "mla":
+            mk = lambda n: {
+                "c_kv": jnp.zeros((n, B, C, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((n, B, C, cfg.qk_rope_dim), dtype),
+            }
+            if nd:
+                st["dense_layers"] = mk(nd)
+            st["layers"] = mk(cfg.n_layers - nd)
+        else:
+            if nd:
+                st["dense_layers"] = _kv_cache(cfg, (nd,), B, C, dtype)
+            st["layers"] = _kv_cache(cfg, (cfg.n_layers - nd,), B, C, dtype)
+    elif fam == "ssm":
+        c = S.init_ssm_cache(cfg, B, dtype)
+        st["layers"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), c
+        )
+    elif fam == "hybrid":
+        ngrp, gsz, rem = zamba_layout(cfg)
+        c = S.init_ssm_cache(cfg, B, dtype)
+        st["groups"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((ngrp, gsz) + a.shape, a.dtype), c
+        )
+        st["shared_attn"] = _kv_cache(cfg, (ngrp,), B, min(cache_len, w) if w else cache_len, dtype)
+        if rem:
+            st["remainder"] = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((rem,) + a.shape, a.dtype), c
+            )
+    elif fam == "encdec":
+        st["layers"] = _kv_cache(cfg, (cfg.n_layers,), B, cache_len, dtype)
+        st["enc_kv"] = {
+            "k": jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, enc_len, cfg.hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, enc_len, cfg.hd), dtype),
+        }
+    return st
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, state: dict):
+    """One token per sequence: tokens [B,1] → (logits [B,1,V], new state)."""
+    pos = state["pos"]
+    positions = pos[None]  # [1]
+    x = _embed(params, cfg, tokens)
+    new_state = dict(state)
+    fam = cfg.family
+
+    def scan_kv(stack_params, caches, h, window):
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp
+            c = {"k": cache["k"], "v": cache["v"], "pos": pos}
+            h, nc = _apply_attn_block(lp, h, cfg, positions=positions, window=window, cache=c)
+            return h, {"k": nc["k"], "v": nc["v"]}
+
+        h, new_caches = jax.lax.scan(body, h, (stack_params, caches))
+        return h, new_caches
+
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            def pair_body(carry, inp):
+                h = carry
+                lp, cl, cg = inp
+                sub0 = jax.tree_util.tree_map(lambda a: a[0], lp)
+                sub1 = jax.tree_util.tree_map(lambda a: a[1], lp)
+                c0 = {"k": cl["k"], "v": cl["v"], "pos": pos}
+                h, n0 = _apply_attn_block(sub0, h, cfg, positions=positions,
+                                          window=cfg.window or 4096, cache=c0)
+                c1 = {"k": cg["k"], "v": cg["v"], "pos": pos}
+                h, n1 = _apply_attn_block(sub1, h, cfg, positions=positions, window=None, cache=c1)
+                return h, ({"k": n0["k"], "v": n0["v"]}, {"k": n1["k"], "v": n1["v"]})
+
+            x, (ncl, ncg) = jax.lax.scan(pair_body, x, (params["layers"], state["local"], state["global"]))
+            new_state["local"], new_state["global"] = ncl, ncg
+        else:
+            x, nc = scan_kv(params["layers"], state["layers"], x, cfg.window)
+            new_state["layers"] = nc
+    elif fam == "moe":
+        if "dense_layers" in params:
+            if cfg.attn_type == "mla":
+                x, nc = _scan_mla(params["dense_layers"], state["dense_layers"], x, cfg, pos, positions, dense=True)
+            else:
+                x, nc = scan_kv(params["dense_layers"], state["dense_layers"], x, cfg.window)
+            new_state["dense_layers"] = nc
+        if cfg.attn_type == "mla":
+            x, nc = _scan_mla(params["layers"], state["layers"], x, cfg, pos, positions, dense=False)
+        else:
+            def mbody(carry, inp):
+                h = carry
+                lp, cache = inp
+                c = {"k": cache["k"], "v": cache["v"], "pos": pos}
+                h, nc2, _aux = _apply_moe_block(lp, h, cfg, positions=positions, cache=c)
+                return h, {"k": nc2["k"], "v": nc2["v"]}
+
+            x, nc = jax.lax.scan(mbody, x, (params["layers"], state["layers"]))
+        new_state["layers"] = nc
+    elif fam == "ssm":
+        def sbody(carry, inp):
+            h = carry
+            lp, cache = inp
+            h, nc = _apply_mamba_block(lp, h, cfg, cache=cache)
+            return h, nc
+
+        x, nc = jax.lax.scan(sbody, x, (params["layers"], state["layers"]))
+        new_state["layers"] = nc
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def gbody(carry, inp):
+            h = carry
+            lp, mc, ac = inp
+
+            def inner(h2, inp2):
+                lp2, mc2 = inp2
+                h2, nc2 = _apply_mamba_block(lp2, h2, cfg, cache=mc2)
+                return h2, nc2
+
+            h, nmc = jax.lax.scan(inner, h, (lp, mc))
+            c = {"k": ac["k"], "v": ac["v"], "pos": pos}
+            h, nac = _apply_attn_block(shared, h, cfg, positions=positions, window=cfg.window, cache=c)
+            return h, (nmc, {"k": nac["k"], "v": nac["v"]})
+
+        x, (nmc, nac) = jax.lax.scan(gbody, x, (params["groups"], state["groups"], state["shared_attn"]))
+        new_state["groups"], new_state["shared_attn"] = nmc, nac
+        if "remainder" in params:
+            def rbody(carry, inp):
+                h = carry
+                lp, mc = inp
+                h, nc = _apply_mamba_block(lp, h, cfg, cache=mc)
+                return h, nc
+
+            x, nrc = jax.lax.scan(rbody, x, (params["remainder"], state["remainder"]))
+            new_state["remainder"] = nrc
+    elif fam == "encdec":
+        def xbody(carry, inp):
+            h = carry
+            lp, cache, ekv = inp
+            c = {"k": cache["k"], "v": cache["v"], "pos": pos}
+            h2 = _norm_apply(cfg, h, lp["ln1"])
+            a, nc = L.attention(lp["attn"], h2, cfg, positions=positions, cache=c)
+            h = h + a
+            h2 = _norm_apply(cfg, h, lp["lnx"])
+            a, _ = _cross_attention(lp["xattn"], h2, None, cfg, xcache=ekv)
+            h = h + a
+            h2 = _norm_apply(cfg, h, lp["ln2"])
+            h = h + L.mlp(lp["mlp"], h2, cfg)
+            return h, {"k": nc["k"], "v": nc["v"]}
+
+        x, nc = jax.lax.scan(xbody, x, (params["layers"], state["layers"], state["enc_kv"]))
+        new_state["layers"] = nc
+
+    new_state["pos"] = pos + 1
+    return _unembed(params, cfg, x), new_state
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    """Logical-axis spec tree mirroring :func:`init_decode_state`."""
+    kv = {
+        "k": ("layers", "kv_batch", "kv_heads", "kv_seq", None),
+        "v": ("layers", "kv_batch", "kv_heads", "kv_seq", None),
+    }
+    st: dict[str, Any] = {"pos": ()}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            st["local"], st["global"] = dict(kv), dict(kv)
+        else:
+            st["layers"] = dict(kv)
+    elif fam == "moe":
+        mla = {
+            "c_kv": ("layers", "kv_batch", "kv_seq", None),
+            "k_rope": ("layers", "kv_batch", "kv_seq", None),
+        }
+        entry = mla if cfg.attn_type == "mla" else dict(kv)
+        if cfg.first_dense_layers:
+            st["dense_layers"] = dict(entry)
+        st["layers"] = dict(entry)
+    elif fam == "ssm":
+        st["layers"] = {
+            "ssm": ("layers", "kv_batch", "ssm_heads", None, None),
+            "conv": ("layers", "kv_batch", None, "mlp"),
+        }
+    elif fam == "hybrid":
+        st["groups"] = {
+            "ssm": ("layers", "layers", "kv_batch", "ssm_heads", None, None),
+            "conv": ("layers", "layers", "kv_batch", None, "mlp"),
+        }
+        st["shared_attn"] = dict(kv)
+        if zamba_layout(cfg)[2]:
+            st["remainder"] = {
+                "ssm": ("layers", "kv_batch", "ssm_heads", None, None),
+                "conv": ("layers", "kv_batch", None, "mlp"),
+            }
+    elif fam == "encdec":
+        st["layers"] = dict(kv)
+        st["enc_kv"] = {
+            "k": ("layers", "kv_batch", "kv_heads", "enc_seq", None),
+            "v": ("layers", "kv_batch", "kv_heads", "enc_seq", None),
+        }
+    return st
+
+
+def batch_specs(cfg: ModelConfig, with_labels: bool = True) -> dict:
+    s: dict[str, Any] = {"tokens": ("batch", None)}
+    if with_labels:
+        s["labels"] = ("batch", None)
+    if cfg.family == "encdec":
+        s["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        s["patches"] = ("batch", None, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward over the prompt that *emits the decode cache*
+# ---------------------------------------------------------------------------
+
+
+def _pack_kv(k: jnp.ndarray, C: int) -> jnp.ndarray:
+    """[..., S, d] prompt keys → ring cache [..., C, d] consistent with
+    decode's ``slot = pos % C`` addressing at pos = S."""
+    S = k.shape[-2]
+    if S <= C:
+        pad = [(0, 0)] * k.ndim
+        pad[-2] = (0, C - S)
+        return jnp.pad(k, pad)
+    last = k[..., S - C :, :]
+    return jnp.roll(last, S % C, axis=-2)
+
+
+def prefill(
+    params, cfg: ModelConfig, batch: dict, cache_len: int
+) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt, return (last-token logits [B,1,V], decode state).
+
+    The returned state is layout-identical to :func:`init_decode_state`
+    (ring-packed window caches, SSM/conv states, MLA latents), so
+    ``decode_step`` continues seamlessly — asserted by tests.
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    if cfg.family == "vlm" and "patches" in batch:
+        pat = batch["patches"].astype(L.dt(cfg)) @ params["patch_proj"].astype(L.dt(cfg))
+        x = jnp.concatenate([pat, _embed(params, cfg, tokens)], axis=1)
+    else:
+        x = _embed(params, cfg, tokens)
+    Sq = x.shape[1]
+    positions = jnp.arange(Sq)
+    adt = x.dtype
+    state: dict[str, Any] = {"pos": jnp.asarray(Sq, jnp.int32)}
+    fam = cfg.family
+    w = cfg.window
+
+    def attn_body_factory(window):
+        def body(h, lp):
+            h2 = _norm_apply(cfg, h, lp["ln1"])
+            if cfg.attn_type == "mla":
+                a, kv = L.mla_attention(lp["attn"], h2, cfg, positions=positions, return_kv=True)
+            else:
+                a, kv = L.attention(
+                    lp["attn"], h2, cfg, positions=positions, window=window, return_kv=True
+                )
+            if "post1" in lp:
+                a = _norm_apply(cfg, a, lp["post1"])
+            h = h + a
+            h2 = _norm_apply(cfg, h, lp["ln2"])
+            if "moe" in lp:
+                m, _aux = M.moe(lp["moe"], h2, cfg, full_capacity=True)
+            else:
+                m = L.mlp(lp["mlp"], h2, cfg)
+            if "post2" in lp:
+                m = _norm_apply(cfg, m, lp["post2"])
+            return h + m, kv
+
+        return body
+
+    def pack_pair(kv, C):
+        return {"k": _pack_kv(kv[0], C).astype(adt), "v": _pack_kv(kv[1], C).astype(adt)}
+
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            def pair_body(h, lp):
+                sub0 = jax.tree_util.tree_map(lambda a: a[0], lp)
+                sub1 = jax.tree_util.tree_map(lambda a: a[1], lp)
+                h, kv0 = attn_body_factory(w or 4096)(h, sub0)
+                h, kv1 = attn_body_factory(None)(h, sub1)
+                return h, (kv0, kv1)
+
+            x, (kv0, kv1) = jax.lax.scan(pair_body, x, params["layers"])
+            state["local"] = pack_pair(kv0, min(cache_len, w or 4096))
+            state["global"] = pack_pair(kv1, cache_len)
+        else:
+            x, kv = jax.lax.scan(attn_body_factory(w), x, params["layers"])
+            C = min(cache_len, w) if w else cache_len
+            state["layers"] = pack_pair(kv, C)
+    elif fam == "moe":
+        C = min(cache_len, w) if w else cache_len
+        if "dense_layers" in params:
+            x, kv = jax.lax.scan(attn_body_factory(w), x, params["dense_layers"])
+            state["dense_layers"] = (
+                {"c_kv": _pack_kv(kv[0], C).astype(adt), "k_rope": _pack_kv(kv[1], C).astype(adt)}
+                if cfg.attn_type == "mla"
+                else pack_pair(kv, C)
+            )
+        x, kv = jax.lax.scan(attn_body_factory(w), x, params["layers"])
+        state["layers"] = (
+            {"c_kv": _pack_kv(kv[0], C).astype(adt), "k_rope": _pack_kv(kv[1], C).astype(adt)}
+            if cfg.attn_type == "mla"
+            else pack_pair(kv, C)
+        )
+    elif fam == "ssm":
+        def sbody(h, lp):
+            h2 = _norm_apply(cfg, h, lp["ln"])
+            y, st = S.mamba2_block(lp["mamba"], h2, cfg, return_state=True)
+            return h + y, st
+
+        x, st = jax.lax.scan(sbody, x, params["layers"])
+        state["layers"] = jax.tree_util.tree_map(lambda a: a.astype(adt), st)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def gbody(h, lp):
+            def inner(h2, lp2):
+                h3 = _norm_apply(cfg, h2, lp2["ln"])
+                y, st = S.mamba2_block(lp2["mamba"], h3, cfg, return_state=True)
+                return h2 + y, st
+
+            h, st = jax.lax.scan(inner, h, lp)
+            h, kv = attn_body_factory(w)(h, shared)
+            return h, (st, kv)
+
+        x, (st, kv) = jax.lax.scan(gbody, x, params["groups"])
+        state["groups"] = st
+        state["shared_attn"] = pack_pair(kv, min(cache_len, w) if w else cache_len)
+        if "remainder" in params:
+            def rbody(h, lp):
+                h2 = _norm_apply(cfg, h, lp["ln"])
+                y, st2 = S.mamba2_block(lp["mamba"], h2, cfg, return_state=True)
+                return h + y, st2
+
+            x, st2 = jax.lax.scan(rbody, x, params["remainder"])
+            state["remainder"] = st2
+    elif fam == "encdec":
+        frames = batch["frames"].astype(adt)
+        epos = jnp.arange(frames.shape[1])
+
+        def enc_body(h, lp):
+            h, _ = _apply_attn_block(lp, h, cfg, positions=epos, window=None, causal=False)
+            return h, None
+
+        e, _ = jax.lax.scan(enc_body, frames, params["encoder"])
+        enc_out = _norm_apply(cfg, e, params["enc_norm"])
+
+        def xbody(h, lp):
+            h2 = _norm_apply(cfg, h, lp["ln1"])
+            a, kv = L.attention(lp["attn"], h2, cfg, positions=positions, return_kv=True)
+            h = h + a
+            h2 = _norm_apply(cfg, h, lp["lnx"])
+            a, _ = _cross_attention(lp["xattn"], h2, enc_out, cfg)
+            h = h + a
+            ek = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wk"].astype(adt))
+            ev = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wv"].astype(adt))
+            h2 = _norm_apply(cfg, h, lp["ln2"])
+            return h + L.mlp(lp["mlp"], h2, cfg), (kv, (ek, ev))
+
+        x, (kv, ekv) = jax.lax.scan(xbody, x, params["layers"])
+        state["layers"] = pack_pair(kv, cache_len)
+        state["enc_kv"] = {"k": ekv[0].astype(adt), "v": ekv[1].astype(adt)}
+
+    logits = _unembed(params, cfg, x[:, -1:, :])
+    return logits, state
+
+
+def _scan_mla(stack_params, caches, x, cfg, pos, positions, dense: bool):
+    def body(carry, inp):
+        h = carry
+        lp, cache = inp
+        c = {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"], "pos": pos}
+        h2 = _norm_apply(cfg, h, lp["ln1"])
+        a, nc = L.mla_attention(lp["attn"], h2, cfg, positions=positions, cache=c)
+        h = h + a
+        h2 = _norm_apply(cfg, h, lp["ln2"])
+        if dense:
+            h = h + L.mlp(lp["mlp"], h2, cfg)
+        else:
+            y, _aux = M.moe(lp["moe"], h2, cfg)
+            h = h + y
+        return h, {"c_kv": nc["c_kv"], "k_rope": nc["k_rope"]}
+
+    return jax.lax.scan(body, x, (stack_params, caches))

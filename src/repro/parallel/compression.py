@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for the slow (cross-pod) axis.
+
+Cross-pod all-reduce rides DCN, ~25× slower than ICI; quantizing the
+gradient payload to int8 with a shared scale cuts those bytes 4× (vs fp32)
+while error feedback keeps SGD unbiased over time (1-bit Adam / EF-SGD
+lineage).  Implementation is shard_map over the compressed axis:
+
+  scale = pmax(|g|)/127   (scalar, negligible)
+  q     = round(g/scale)  int8
+  sum_q = psum(q as int32)
+  out   = sum_q · scale / n_axis
+  residual' = g − q·scale   (stays local, added next step)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _compress_leaf(g: jnp.ndarray, r: jnp.ndarray, axis: str):
+    g32 = g.astype(jnp.float32) + r
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    dequant_local = q.astype(jnp.float32) * scale
+    new_r = g32 - dequant_local
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    summed = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32)
+    return (summed * scale / n).astype(g.dtype), new_r
+
+
+def compressed_mean_grads(grads: Any, residual: Any, mesh, axis: str = "pod", spec: P | None = None):
+    """All-reduce-mean ``grads`` over ``axis`` with int8 payload + EF residual.
+
+    ``spec`` is the per-leaf layout of the inputs w.r.t. ``mesh`` (default:
+    leading dim sharded over ``axis`` — i.e. one gradient row per axis
+    member, which is also how the trainer stacks per-pod grads before the
+    cross-pod sync).  Returns (mean_grads, new_residual), mean replicated
+    per member.
+    """
+    spec = P(axis) if spec is None else spec
+
+    def fn(g, r):
+        flat_g, treedef = jax.tree_util.tree_flatten(g)
+        flat_r = treedef.flatten_up_to(r)
+        out, res = [], []
+        for gg, rr in zip(flat_g, flat_r):
+            o, nr = _compress_leaf(gg, rr, axis)
+            out.append(o)
+            res.append(nr)
+        return jax.tree_util.tree_unflatten(treedef, out), jax.tree_util.tree_unflatten(treedef, res)
+
+    specs = jax.tree_util.tree_map(lambda _: spec, grads)
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(specs, specs),
+        out_specs=(specs, specs),
+        check_vma=False,
+    )(grads, residual)
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

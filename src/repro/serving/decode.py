@@ -1,0 +1,133 @@
+"""Serving: batched greedy decode, resident or host-offloaded KV cache.
+
+``decode_step_offloaded`` is Algorithm 3 applied to long-context serving:
+the KV cache (the serving analogue of the multi-spring state — huge,
+evolving, touched once per step) lives in host memory, split into
+``npart`` layer-group blocks.  Per token, block ``j`` streams host→device,
+its layer group attends + appends, and the block returns to host while the
+next block's transfer is in flight (XLA overlaps the unrolled chain).
+Device-resident KV is only ever 1/npart of the total — the serving
+memory wall crossed the same way the paper crosses the FEM one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hetmem
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    kv_offload: bool = False
+    kv_npart: int = 4
+    temperature: float = 0.0  # 0 → greedy
+
+
+def _tree_slice(tree: Any, lo: int, hi: int) -> Any:
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+def _split_layer_stack(params: Any, caches: Any, npart: int):
+    """Split a uniform [L,...] stack into npart contiguous groups."""
+    L_total = jax.tree_util.tree_leaves(caches)[0].shape[0]
+    assert L_total % npart == 0, f"layers {L_total} % npart {npart}"
+    g = L_total // npart
+    pgroups = [_tree_slice(params, j * g, (j + 1) * g) for j in range(npart)]
+    cgroups = [_tree_slice(caches, j * g, (j + 1) * g) for j in range(npart)]
+    return pgroups, cgroups
+
+
+def decode_step_offloaded(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    state: dict,
+    kv_blocks: list[Any],      # host-resident per-group cache blocks
+    *,
+    offload: bool = True,
+):
+    """One decode step with layer-group-streamed KV (uniform stacks only:
+    dense GQA / MoE families).  Returns (logits, state, new_kv_blocks)."""
+    assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global
+    pos = state["pos"]
+    positions = pos[None]
+    x = T._embed(params, cfg, tokens)
+    npart = len(kv_blocks)
+    L_total = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    assert L_total % npart == 0
+    g = L_total // npart
+    pgroups = [_tree_slice(params["layers"], j * g, (j + 1) * g) for j in range(npart)]
+
+    new_blocks = []
+    for j in range(npart):
+        blk = hetmem.to_device(kv_blocks[j]) if offload else kv_blocks[j]
+
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp
+            c = {"k": cache["k"], "v": cache["v"], "pos": pos}
+            if cfg.family == "moe":
+                h, nc, _aux = T._apply_moe_block(lp, h, cfg, positions=positions, cache=c)
+            else:
+                h, nc = T._apply_attn_block(
+                    lp, h, cfg, positions=positions, window=cfg.window, cache=c
+                )
+            return h, {"k": nc["k"], "v": nc["v"]}
+
+        x, new_blk = jax.lax.scan(body, x, (pgroups[j], blk))
+        new_blocks.append(hetmem.to_host(new_blk) if offload else new_blk)
+
+    logits = T._unembed(params, cfg, x)
+    state = dict(state)
+    state["pos"] = pos + 1
+    return logits, state, new_blocks
+
+
+def make_kv_blocks(cfg: ModelConfig, B: int, cache_len: int, npart: int, dtype=jnp.bfloat16, host=True):
+    """Host-resident per-group KV blocks for a uniform [L,...] stack."""
+    nd = cfg.first_dense_layers
+    L_moe = cfg.n_layers - nd
+    assert nd == 0, "offloaded serving supports uniform stacks"
+    C = min(cache_len, cfg.window) if cfg.window else cache_len
+    g = cfg.n_layers // npart
+    assert g * npart == cfg.n_layers
+    blocks = []
+    for _ in range(npart):
+        blk = {
+            "k": jnp.zeros((g, B, cfg.n_kv_heads, C, cfg.hd), dtype),
+            "v": jnp.zeros((g, B, cfg.n_kv_heads, C, cfg.hd), dtype),
+        }
+        blocks.append(hetmem.put_host(blk) if host and hetmem.host_memory_available() else blk)
+    return blocks
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jnp.ndarray,  # [B, S0]
+    n_new: int,
+    scfg: ServeConfig = ServeConfig(),
+    cache_len: Optional[int] = None,
+) -> jnp.ndarray:
+    """Reference serving loop (resident cache): prefill-by-decode + generate."""
+    B, S0 = prompt.shape
+    total = S0 + n_new
+    cache_len = cache_len or total
+    state = T.init_decode_state(cfg, B, cache_len=cache_len, dtype=jnp.dtype(cfg.dtype))
+    step = jax.jit(lambda p, t, s: T.decode_step(p, cfg, t, s))
+    out = [prompt]
+    logits = None
+    for t in range(S0):
+        logits, state = step(params, prompt[:, t : t + 1], state)
+    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
+    for _ in range(n_new):
+        out.append(cur)
+        logits, state = step(params, cur, state)
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
+    return jnp.concatenate(out, axis=1)

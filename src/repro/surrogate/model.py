@@ -1,0 +1,116 @@
+"""NN surrogate of §3: symmetric 1D-CNN encoder/decoder around LSTM layers.
+
+Estimates the 3-component surface velocity waveform at an observation point
+from the 3-component bedrock input wave, capturing 3-D nonlinear
+amplification.  Architecture per the paper: n_c strided conv encoder →
+n_lstm LSTM layers in latent space → n_c transposed-conv decoder whose
+final layer splits into three independent per-component groups.  MAE loss.
+Pure JAX (no flax): params are pytrees, LSTM is a lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    n_c: int = 2              # conv encoder/decoder depth (search {2,3,4})
+    n_lstm: int = 2           # LSTM layers (search {1,2,3})
+    kernel: int = 9           # conv kernel (search {3,5,9,17,33,65})
+    latent: int = 64          # latent width (paper: up to 1024; tests small)
+    in_ch: int = 3
+    out_ch: int = 3
+    lr: float = 1.75e-4       # paper's tuned value as default
+
+
+def _conv_init(key, k, cin, cout):
+    scale = (2.0 / (k * cin)) ** 0.5
+    return scale * jax.random.normal(key, (k, cin, cout), jnp.float32)
+
+
+def init_params(cfg: SurrogateConfig, key) -> Any:
+    ks = iter(jax.random.split(key, 4 * cfg.n_c + 4 * cfg.n_lstm + 8))
+    p: dict[str, Any] = {"enc": [], "dec": [], "lstm": []}
+    cin = cfg.in_ch
+    for i in range(cfg.n_c):
+        cout = cfg.latent if i == cfg.n_c - 1 else max(cfg.latent // 2, 8)
+        p["enc"].append({"w": _conv_init(next(ks), cfg.kernel, cin, cout),
+                         "b": jnp.zeros((cout,))})
+        cin = cout
+    for _ in range(cfg.n_lstm):
+        H = cfg.latent
+        p["lstm"].append({
+            "wx": _conv_init(next(ks), 1, cin, 4 * H)[0],
+            "wh": _conv_init(next(ks), 1, H, 4 * H)[0],
+            "b": jnp.zeros((4 * H,)),
+        })
+        cin = H
+    for i in range(cfg.n_c):
+        cout = max(cfg.latent // 2, 8)
+        p["dec"].append({"w": _conv_init(next(ks), cfg.kernel, cin, cout),
+                         "b": jnp.zeros((cout,))})
+        cin = cout
+    # final decoder layer: three independent per-component conv heads
+    p["heads"] = [
+        {"w": _conv_init(next(ks), cfg.kernel, cin, 1), "b": jnp.zeros((1,))}
+        for _ in range(cfg.out_ch)
+    ]
+    return p
+
+
+def _conv1d(x, w, b, stride=1):
+    """x [B,T,C] ⊛ w [K,Cin,Cout] (SAME padding)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    return y + b
+
+
+def _conv1d_transpose(x, w, b, stride=2):
+    y = jax.lax.conv_transpose(
+        x, w, strides=(stride,), padding="SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return y + b
+
+
+def _lstm_layer(p, x):
+    """x [B,T,C] → [B,T,H] (single direction)."""
+    H = p["wh"].shape[0]
+    B = x.shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, H)), jnp.zeros((B, H))
+    _, hs = jax.lax.scan(step, h0, x.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def apply(params, cfg: SurrogateConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x [B,T,3] input wave → ŷ [B,T,3] response waveform."""
+    h = x
+    for layer in params["enc"]:
+        h = jax.nn.gelu(_conv1d(h, layer["w"], layer["b"], stride=2))
+    for layer in params["lstm"]:
+        h = _lstm_layer(layer, h)
+    for layer in params["dec"]:
+        h = jax.nn.gelu(_conv1d_transpose(h, layer["w"], layer["b"], stride=2))
+    outs = [_conv1d(h, hd["w"], hd["b"]) for hd in params["heads"]]
+    h = jnp.concatenate(outs, axis=-1)
+    # transposed convs restore T exactly when T % 2**n_c == 0
+    return h[:, : x.shape[1]]
+
+
+def mae_loss(params, cfg, x, y):
+    pred = apply(params, cfg, x)
+    return jnp.abs(pred - y).mean()

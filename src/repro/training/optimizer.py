@@ -1,0 +1,110 @@
+"""AdamW in pure JAX (no optax in this environment), leaf-wise form.
+
+The leaf-wise update functions are deliberately free of any pytree
+structure: the heterogeneous-memory manager applies them per streamed block
+(core/offload.py), and the plain optimizer maps them over the whole tree.
+Both paths call the *same* math, so offloaded == resident bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    # optimizer-state dtype: fp32 master moments (paper-grade fidelity)
+    state_dtype: Any = jnp.float32
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then constant (schedules kept simple; cosine in train.py)."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.learning_rate * warm
+
+
+def init_moments_leaf(p: jnp.ndarray, cfg: AdamWConfig) -> dict[str, jnp.ndarray]:
+    z = jnp.zeros(p.shape, dtype=cfg.state_dtype)
+    return {"m": z, "v": z}
+
+
+def adamw_update_leaf(
+    g: jnp.ndarray,
+    p: jnp.ndarray,
+    mv: dict[str, jnp.ndarray],
+    step: jnp.ndarray,
+    cfg: AdamWConfig,
+    lr: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """One AdamW step for a single leaf. Returns (new_param, new_moments)."""
+    lr = lr_at(cfg, step) if lr is None else lr
+    g32 = g.astype(cfg.state_dtype)
+    m = cfg.b1 * mv["m"] + (1.0 - cfg.b1) * g32
+    v = cfg.b2 * mv["v"] + (1.0 - cfg.b2) * (g32 * g32)
+    t = (step + 1).astype(cfg.state_dtype)
+    mhat = m / (1.0 - cfg.b1**t)
+    vhat = v / (1.0 - cfg.b2**t)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(cfg.state_dtype)
+    new_p = (p.astype(cfg.state_dtype) - lr * upd).astype(p.dtype)
+    return new_p, {"m": m, "v": v}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# Resident (non-offloaded) optimizer — the conventional baseline.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    moments: Any  # pytree mirroring params with {"m","v"} leaves
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.step, s.moments), None),
+    lambda _, c: AdamWState(step=c[0], moments=c[1]),
+)
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    moments = jax.tree_util.tree_map(lambda p: init_moments_leaf(p, cfg), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), moments=moments)
+
+
+def adamw_apply(
+    grads: Any, params: Any, state: AdamWState, cfg: AdamWConfig
+) -> tuple[Any, AdamWState]:
+    if cfg.grad_clip_norm:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    g_flat, treedef = jax.tree_util.tree_flatten(grads)
+    p_flat = treedef.flatten_up_to(params)
+    mv_flat = treedef.flatten_up_to(state.moments)  # each leaf is {"m","v"}
+    out = [
+        adamw_update_leaf(g, p, mv, state.step, cfg)
+        for g, p, mv in zip(g_flat, p_flat, mv_flat)
+    ]
+    new_params = jax.tree_util.tree_unflatten(treedef, [x[0] for x in out])
+    new_moments = jax.tree_util.tree_unflatten(treedef, [x[1] for x in out])
+    return new_params, AdamWState(step=state.step + 1, moments=new_moments)

@@ -1,0 +1,7 @@
+from repro.utils.tree import (  # noqa: F401
+    byte_size,
+    group_leaves_into_blocks,
+    leaves_with_paths,
+    reassemble_blocks,
+    tree_allclose,
+)

@@ -1,0 +1,122 @@
+"""Distributed-path tests on 8 forced host devices (subprocess isolation:
+the device count must be set before jax initializes, so each test spawns a
+fresh interpreter)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, timeout=420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_runs_on_mesh():
+    """Reduced arch, 2×4 (data, model) mesh: sharded init + train step."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer as T
+        from repro.parallel import sharding as sh
+        from repro.training.optimizer import AdamWConfig
+        from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+
+        cfg = ARCHS["qwen3-1.7b"].reduced()
+        mesh = make_host_mesh((2, 4))
+        rules = sh.rules_for(cfg, mesh, kind="train", global_batch=8, seq_len=64)
+        with mesh, sh.use_mesh(mesh, rules):
+            params, pspecs = T.init_params(cfg, jax.random.key(0))
+            pshard = sh.tree_shardings(pspecs, mesh, rules)
+            params = jax.tree_util.tree_map(jax.device_put, params, pshard)
+            tcfg = TrainConfig(adamw=AdamWConfig(learning_rate=1e-3, warmup_steps=2))
+            opt = init_train_state(cfg, tcfg, params)
+            step = jax.jit(make_train_step(cfg, tcfg))
+            toks = jax.random.randint(jax.random.key(1), (8, 64), 0, cfg.vocab_size)
+            batch = {"tokens": toks, "labels": toks}
+            losses = []
+            for _ in range(3):
+                params, opt, m = step(params, opt, batch)
+                losses.append(float(m["nll"]))
+            assert np.isfinite(losses).all(), losses
+            assert losses[-1] < losses[0]
+            # params actually sharded across devices
+            leaf = jax.tree_util.tree_leaves(params)[1]
+            assert len(leaf.sharding.device_set) == 8
+            print("OK", losses[0], losses[-1])
+    """)
+    assert "OK" in out
+
+
+def test_int8_compressed_allreduce_accuracy():
+    """Quantized cross-pod gradient all-reduce ≈ exact mean; error feedback
+    keeps the *accumulated* bias bounded over steps."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_host_mesh
+        from repro.parallel.compression import compressed_mean_grads, init_residual
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = make_host_mesh((8,), ("pod",))
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)}  # per-pod rows
+        # replicate-per-pod semantics: each pod member holds its own grads;
+        # emulate by sharding rows over pod then comparing to the true mean
+        r = init_residual(g)
+        acc_err = 0.0
+        with mesh:
+            for step in range(5):
+                g = {"w": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)}
+                gs = jax.device_put(g, {"w": NamedSharding(mesh, P("pod"))})
+                mean, r = compressed_mean_grads(gs, r, mesh, axis="pod")
+                true = jnp.broadcast_to(g["w"].mean(0, keepdims=True), g["w"].shape)
+                err = float(jnp.abs(mean["w"] - true).max())
+                scale = float(jnp.abs(true).max())
+                acc_err += err
+                assert err < 0.05 * scale + 1e-3, (step, err, scale)
+        print("OK", acc_err)
+    """)
+    assert "OK" in out
+
+
+def test_dryrun_cell_on_host_mesh():
+    """The dry-run machinery end-to-end on a small mesh (fast arch)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS, SHAPES
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import layers as L, transformer as T
+        from repro.parallel import sharding as sh
+
+        cfg = ARCHS["qwen3-1.7b"]
+        mesh = make_host_mesh((2, 4))
+        rules = sh.rules_for(cfg, mesh, kind="decode", global_batch=8, seq_len=2048)
+        with L.abstract_params():
+            params, pspecs = T.init_params(cfg, jax.random.key(0))
+        pshard = sh.tree_shardings(pspecs, mesh, rules)
+        state = jax.eval_shape(lambda: T.init_decode_state(cfg, 8, cache_len=2048))
+        cshard = sh.tree_shardings(T.cache_specs(cfg), mesh, rules)
+        toks = jax.ShapeDtypeStruct((8, 1), jnp.int32)
+        with mesh, sh.use_mesh(mesh, rules):
+            lowered = jax.jit(
+                lambda p, t, s: T.decode_step(p, cfg, t, s),
+                in_shardings=(pshard, None, cshard), donate_argnums=(2,),
+            ).lower(params, toks, state)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        assert compiled.cost_analysis()["flops"] > 0
+        print("OK", mem.temp_size_in_bytes)
+    """)
+    assert "OK" in out

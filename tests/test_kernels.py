@@ -1,0 +1,166 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes as required for every kernel in kernels/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fem import meshgen, multispring as ms, quadrature as quad
+from repro.kernels.ebe_matvec import ebe_element_matvec_pallas, ebe_element_matvec_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
+from repro.kernels.multispring import multispring_pallas
+
+
+# ---------------------------------------------------------------------------
+# EBE element product
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 5e-6), (jnp.float64, 1e-13)])
+@pytest.mark.parametrize("tile_e", [16, 64])
+def test_ebe_kernel_matches_ref(dtype, rtol, tile_e):
+    with jax.enable_x64(dtype == jnp.float64):
+        m = meshgen.generate(2, 2, 2, pad_elems_to=4)
+        rng = np.random.default_rng(1)
+        E = m.n_elem
+        u_e = jnp.asarray(rng.normal(size=(E, 10, 3)), dtype)
+        Q = rng.normal(size=(E, quad.NPOINT, 6, 6))
+        D = jnp.asarray(Q @ Q.transpose(0, 1, 3, 2), dtype)
+        Jinv = jnp.asarray(m.Jinv, dtype)
+        wdet = jnp.asarray(m.wdet, dtype)
+        coef = jnp.asarray(rng.uniform(0.5, 1.5, size=(E,)), dtype)
+        ref = ebe_element_matvec_ref(u_e, D, Jinv, wdet, coef)
+        out = ebe_element_matvec_pallas(u_e, D, Jinv, wdet, coef, tile_e=tile_e)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=rtol, atol=rtol * float(jnp.abs(ref).max())
+        )
+
+
+@given(seed=st.integers(0, 1000), nelem_pad=st.sampled_from([0, 3, 17]))
+@settings(max_examples=8, deadline=None)
+def test_ebe_kernel_ragged_tiles(seed, nelem_pad):
+    """Property: arbitrary E (not a tile multiple) still matches the oracle."""
+    m = meshgen.generate(2, 2, 1, pad_elems_to=1)
+    rng = np.random.default_rng(seed)
+    E = m.n_elem - nelem_pad if nelem_pad < m.n_elem else m.n_elem
+    u_e = jnp.asarray(rng.normal(size=(E, 10, 3)), jnp.float32)
+    D = jnp.asarray(
+        np.tile(np.eye(6), (E, quad.NPOINT, 1, 1)) * rng.uniform(0.5, 2.0), jnp.float32
+    )
+    Jinv = jnp.asarray(m.Jinv[:E], jnp.float32)
+    wdet = jnp.asarray(m.wdet[:E], jnp.float32)
+    ref = ebe_element_matvec_ref(u_e, D, Jinv, wdet, None)
+    out = ebe_element_matvec_pallas(u_e, D, Jinv, wdet, None, tile_e=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5 * float(jnp.abs(ref).max())
+    )
+
+
+# ---------------------------------------------------------------------------
+# multispring constitutive update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5), (jnp.float64, 1e-12)])
+@pytest.mark.parametrize("nspring", [30, 150])
+def test_multispring_kernel_path_matches_ref(dtype, tol, nspring):
+    """6-step random strain path: σ, D, damping frac and *flags* must agree."""
+    with jax.enable_x64(dtype == jnp.float64):
+        rng = np.random.default_rng(7)
+        P = 29
+        params = ms.SpringParams(
+            G0=jnp.asarray(rng.uniform(5e7, 5e8, P), dtype),
+            gamma_r=jnp.asarray(rng.uniform(5e-4, 5e-3, P), dtype),
+            beta=jnp.asarray(rng.uniform(0.7, 1.0, P), dtype),
+            bulk=jnp.asarray(rng.uniform(1e8, 1e9, P), dtype),
+        )
+        n, w = ms.spring_directions(nspring)
+        n_j, w_j = jnp.asarray(n, dtype), jnp.asarray(w, dtype)
+        st_ref = ms.init_state(P, nspring, dtype)
+        st_pal = dict(st_ref)
+        eps = jnp.zeros((P, 6), dtype)
+        for _ in range(6):
+            eps = eps + jnp.asarray(rng.normal(scale=8e-4, size=(P, 6)), dtype)
+            sr, Dr, st_ref = ms.update(eps, st_ref, params, n_j, w_j)
+            sp, Dp, st_pal, fp = multispring_pallas(eps, st_pal, params, n_j, w_j, tile_p=16)
+            np.testing.assert_allclose(
+                np.asarray(sp), np.asarray(sr), rtol=tol, atol=tol * float(jnp.abs(sr).max())
+            )
+            np.testing.assert_allclose(
+                np.asarray(Dp), np.asarray(Dr), rtol=tol, atol=tol * float(jnp.abs(Dr).max())
+            )
+            for key in ("direction", "virgin"):
+                np.testing.assert_array_equal(np.asarray(st_pal[key]), np.asarray(st_ref[key]))
+        fr = ms.hysteretic_damping(st_ref, params)
+        np.testing.assert_allclose(np.asarray(fp), np.asarray(fr), rtol=1e-4, atol=1e-6)
+
+
+def test_multispring_kernel_in_full_simulation():
+    """Drop the Pallas kernel into Proposed Method 2 — same trajectory."""
+    from repro.fem import methods
+    from repro.kernels import multispring as ks
+
+    with jax.enable_x64(True):
+        mesh = meshgen.generate(2, 2, 2, pad_elems_to=4)
+        cfg = methods.SeismicConfig(dt=0.01, tol=1e-8, maxiter=400, npart=2, nspring=12)
+        nt = 4
+        wave = np.zeros((nt, 3))
+        wave[:, 0] = 0.3 * np.sin(2 * np.pi * 2.0 * np.arange(nt) * cfg.dt)
+        ref = methods.run(mesh, cfg, wave, method="proposed2")
+        out = methods.run(mesh, cfg, wave, method="proposed2", multispring_fn=ks.update)
+        a, b = np.asarray(ref["velocity_history"]), np.asarray(out["velocity_history"])
+        np.testing.assert_allclose(b, a, atol=1e-6 * max(np.abs(a).max(), 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Skv,dh,causal,window,cap",
+    [
+        (1, 2, 2, 64, 64, 32, True, None, None),
+        (2, 4, 2, 100, 100, 64, True, None, None),   # GQA, ragged seq
+        (1, 2, 1, 48, 160, 64, True, None, None),    # q shorter than kv (chunked prefill)
+        (1, 2, 2, 96, 96, 64, True, 32, None),       # sliding window
+        (1, 2, 2, 80, 80, 64, True, None, 30.0),     # gemma2 softcap
+        (1, 3, 1, 64, 64, 40, False, None, None),    # cross-attn-like, odd head dim
+    ],
+)
+def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Skv, dh, causal, window, cap):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, dh)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window, softcap=cap, tq=32, tk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 64)), dtype)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    out = flash_attention_pallas(q, k, v, tq=32, tk=128)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), atol=atol)
+
+
+@given(sq=st.sampled_from([1, 7, 33, 130]), skv=st.sampled_from([64, 129, 200]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_ragged_property(sq, skv):
+    """Property: any (Sq ≤ Skv) pair incl. decode (Sq=1) matches the oracle."""
+    if sq > skv:
+        sq = skv
+    rng = np.random.default_rng(sq * 1000 + skv)
+    q = jnp.asarray(rng.normal(size=(1, 2, sq, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, skv, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, skv, 32)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(q, k, v, causal=True, tq=32, tk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,257 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward
+consistency + MoE routing properties + abstract (allocation-free) init."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, B=2, S=16):
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.n_frontend_tokens, cfg.d_model)
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.n_frontend_tokens, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(name):
+    """Reduced config: one forward + one grad step, shapes + finiteness."""
+    cfg = ARCHS[name].reduced()
+    params, specs = T.init_params(cfg, KEY)
+    # spec tree mirrors param tree
+    assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    batch = _batch(cfg)
+    logits, aux = T.forward(params, cfg, batch, remat=False)
+    S_total = batch["tokens"].shape[1] + (
+        cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    )
+    assert logits.shape == (2, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    def loss_fn(p):
+        lg, aux = T.forward(p, cfg, batch, remat=True)
+        labels = batch["tokens"]
+        lp = jax.nn.log_softmax(lg[:, -labels.shape[1] :, :], axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree_util.tree_leaves(grads)))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_matches_forward(name):
+    """Teacher-forced sequential decode reproduces the parallel forward."""
+    cfg = ARCHS[name].reduced()
+    if cfg.n_experts:  # dropless capacity so train-forward == decode routing
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params, _ = T.init_params(cfg, KEY)
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    enc_len = 0
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.n_frontend_tokens, cfg.d_model))
+        enc_len = cfg.n_frontend_tokens
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((B, 0, cfg.d_model))  # text-only decode
+
+    logits_fwd, _ = T.forward(params, cfg, batch, remat=False)
+    state = T.init_decode_state(cfg, B, cache_len=S, dtype=jnp.float32, enc_len=enc_len)
+    if cfg.family == "encdec":
+        state = _fill_cross_cache(params, cfg, batch["frames"], state)
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, toks[:, t : t + 1], state)
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.abs(logits_fwd).max())
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_fwd), atol=5e-5 * scale
+    )
+
+
+def _fill_cross_cache(params, cfg, frames, state):
+    e = frames.astype(jnp.float32)
+    epos = jnp.arange(e.shape[1])
+
+    def enc_body(h, lp):
+        h, _ = T._apply_attn_block(lp, h, cfg, positions=epos, window=None, causal=False)
+        return h, None
+
+    e, _ = jax.lax.scan(enc_body, e, params["encoder"])
+    enc_out = T._norm_apply(cfg, e, params["enc_norm"])
+
+    def kv_body(_, lp):
+        k = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wv"])
+        return None, (k, v)
+
+    _, (ks_, vs_) = jax.lax.scan(kv_body, None, params["layers"])
+    state = dict(state)
+    state["enc_kv"] = {"k": ks_, "v": vs_}
+    return state
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_then_decode_matches_forward(name):
+    """prefill() emits a decode-layout cache; decode continues seamlessly."""
+    cfg = ARCHS[name].reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params, _ = T.init_params(cfg, KEY)
+    B, S0, NEW = 2, 8, 4
+    total = S0 + NEW
+    toks = jax.random.randint(jax.random.key(1), (B, total), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((B, 0, cfg.d_model))
+    logits_fwd, _ = T.forward(params, cfg, batch, remat=False)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :S0]
+    lg, state = T.prefill(params, cfg, pre, cache_len=total)
+    scale = float(jnp.abs(logits_fwd).max())
+    errs = [float(jnp.abs(lg[:, 0] - logits_fwd[:, S0 - 1]).max())]
+    for t in range(S0, total):
+        lg, state = T.decode_step(params, cfg, toks[:, t : t + 1], state)
+        errs.append(float(jnp.abs(lg[:, 0] - logits_fwd[:, t]).max()))
+    assert max(errs) < 5e-5 * scale, errs
+
+
+def test_sliding_window_cache_is_ring_buffer():
+    """Decode past the window: cache stays at window size, logits finite and
+    match a full forward restricted to the window."""
+    cfg = dataclasses.replace(ARCHS["mixtral-8x22b"].reduced(), window=4, capacity_factor=8.0)
+    params, _ = T.init_params(cfg, KEY)
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits_fwd, _ = T.forward(params, cfg, {"tokens": toks}, remat=False)
+    state = T.init_decode_state(cfg, B, cache_len=S, dtype=jnp.float32)
+    assert state["layers"]["k"].shape[3] == 4  # ring capacity == window
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, toks[:, t : t + 1], state)
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.abs(logits_fwd).max())
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_fwd), atol=1e-4 * scale)
+
+
+# ---------------------------------------------------------------------------
+# MoE properties
+# ---------------------------------------------------------------------------
+
+
+def test_moe_dropless_when_capacity_covers():
+    cfg = dataclasses.replace(ARCHS["mixtral-8x22b"].reduced(), capacity_factor=8.0)
+    p, _ = MOE.init_moe(jax.random.key(4), cfg)
+    x = jax.random.normal(jax.random.key(5), (2, 16, cfg.d_model))
+    y, aux = MOE.moe(p, x, cfg)
+    y_full, _ = MOE.moe(p, x, cfg, full_capacity=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_full), atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(ARCHS["mixtral-8x22b"].reduced(), capacity_factor=0.1)
+    p, _ = MOE.init_moe(jax.random.key(4), cfg)
+    x = jax.random.normal(jax.random.key(5), (2, 32, cfg.d_model))
+    y_small, _ = MOE.moe(p, x, cfg)
+    y_full, _ = MOE.moe(p, x, cfg, full_capacity=True)
+    assert float(jnp.abs(y_small - y_full).max()) > 1e-4  # something was dropped
+
+
+def test_moe_gates_sum_to_one():
+    cfg = ARCHS["deepseek-v2-236b"].reduced()
+    x = jax.random.normal(jax.random.key(6), (8, cfg.n_experts))
+    top, idx = jax.lax.top_k(jax.nn.softmax(x, -1), cfg.top_k)
+    gates = top / top.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD equivalence (chunked == recurrent) — repeated here as a pytest
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 7, 24])
+def test_ssd_chunked_equals_recurrence(chunk):
+    rng = np.random.default_rng(0)
+    B, S, H, P, G, N = 2, 24, 4, 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = ssd_decode_step(x[:, t : t + 1], dt[:, t : t + 1], A, Bm[:, t : t + 1], Cm[:, t : t + 1], state)
+        ys.append(y[:, 0])
+    y_naive = jnp.stack(ys, axis=1)
+    y_c, fs = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_naive), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(state), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# abstract init: dry-run path allocates nothing, matches real shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_abstract_init_matches_real_shapes(name):
+    cfg = ARCHS[name].reduced()
+    real, specs_r = T.init_params(cfg, KEY)
+    with L.abstract_params():
+        abstract, specs_a = T.init_params(cfg, KEY)
+    assert jax.tree_util.tree_structure(real) == jax.tree_util.tree_structure(abstract)
+    for a, b in zip(jax.tree_util.tree_leaves(real), jax.tree_util.tree_leaves(abstract)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert isinstance(b, jax.ShapeDtypeStruct)
+    # specs identical regardless of mode
+    assert jax.tree_util.tree_leaves(
+        specs_r, is_leaf=lambda x: isinstance(x, tuple)
+    ) == jax.tree_util.tree_leaves(specs_a, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def test_full_config_abstract_init_is_cheap():
+    """llama3-405b abstract init must produce full shapes with no allocation."""
+    cfg = ARCHS["llama3-405b"]
+    with L.abstract_params():
+        params, specs = T.init_params(cfg, KEY)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    assert 380e9 < n_params < 430e9, f"{n_params/1e9:.1f}B params"
+
+
+def test_shape_applicability_rules():
+    assert shape_applicable(ARCHS["llama3-405b"], SHAPES["long_500k"])[0] is False
+    assert shape_applicable(ARCHS["mamba2-780m"], SHAPES["long_500k"])[0] is True
+    assert shape_applicable(ARCHS["gemma2-2b"], SHAPES["long_500k"])[0] is True
+    assert shape_applicable(ARCHS["mixtral-8x22b"], SHAPES["long_500k"])[0] is True
+    assert shape_applicable(ARCHS["deepseek-v2-236b"], SHAPES["long_500k"])[0] is False
+    for n, c in ARCHS.items():
+        assert shape_applicable(c, SHAPES["train_4k"])[0]

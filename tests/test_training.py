@@ -1,0 +1,189 @@
+"""Training runtime: convergence, offloaded-optimizer equivalence,
+checkpoint/restart (+elastic), straggler watchdog, data pipeline, serving."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.offload import OffloadConfig
+from repro.models import transformer as T
+from repro.serving import decode as D
+from repro.training import data as data_mod
+from repro.training.checkpoint import CheckpointManager
+from repro.training.elastic import StepWatchdog, elastic_plan
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+
+TINY = ARCHS["qwen3-1.7b"].reduced()
+
+
+def _tiny_setup(offload=False, npart=4):
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(learning_rate=3e-3, warmup_steps=10, weight_decay=0.0),
+        offload=OffloadConfig(optimizer_state=offload, optimizer_npart=npart),
+    )
+    params, _ = T.init_params(TINY, jax.random.key(0))
+    opt = init_train_state(TINY, tcfg, params)
+    step = make_train_step(TINY, tcfg)
+    return params, opt, step, tcfg
+
+
+def test_training_reduces_loss_on_learnable_data():
+    params, opt, step, _ = _tiny_setup()
+    dcfg = data_mod.DataConfig(vocab_size=TINY.vocab_size, seq_len=32, global_batch=8)
+    it = data_mod.batches(dcfg)
+    step = jax.jit(step)
+    losses = []
+    for i in range(30):
+        b = next(it)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["nll"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_offloaded_train_step_matches_resident():
+    params_r, opt_r, step_r, _ = _tiny_setup(offload=False)
+    params_o, opt_o, step_o, _ = _tiny_setup(offload=True, npart=3)
+    dcfg = data_mod.DataConfig(vocab_size=TINY.vocab_size, seq_len=16, global_batch=4)
+    it = data_mod.batches(dcfg)
+    for i in range(3):
+        b = next(it)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params_r, opt_r, m_r = step_r(params_r, opt_r, batch)
+        params_o, opt_o, m_o = step_o(params_o, opt_o, batch)
+        np.testing.assert_allclose(float(m_r["loss"]), float(m_o["loss"]), rtol=1e-6)
+    for a, b_ in zip(jax.tree_util.tree_leaves(params_r), jax.tree_util.tree_leaves(params_o)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    params, opt, step, _ = _tiny_setup()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, {"params": params}, blocking=True)
+    assert mgr.all_steps() == [2, 3]  # gc keeps last 2
+    restored = mgr.restore(3, {"params": params})
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    params, *_ = _tiny_setup()
+    mgr.save(7, {"params": params}, blocking=True)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert mgr.latest_step() == 7
+
+
+def test_checkpoint_restore_after_interrupted_training(tmp_path):
+    """Simulated failure/restart: resume reproduces the uninterrupted run."""
+    dcfg = data_mod.DataConfig(vocab_size=TINY.vocab_size, seq_len=16, global_batch=4, seed=5)
+    mgr = CheckpointManager(str(tmp_path))
+
+    def run(n_steps, params, opt, start=0):
+        it = data_mod.batches(dataclasses.replace(dcfg, seed=100))
+        batches = [next(it) for _ in range(n_steps)]
+        _, _, step, _ = _tiny_setup()
+        for i in range(start, n_steps):
+            batch = {k: jnp.asarray(v) for k, v in batches[i].items()}
+            params, opt, _ = step(params, opt, batch)
+        return params, opt
+
+    params0, opt0, *_ = _tiny_setup()
+    p_full, _ = run(6, params0, opt0)
+    # crash after 3 steps → checkpoint → restart
+    p_half, o_half = run(3, params0, opt0)
+    mgr.save(3, {"params": p_half, "moments": o_half.moments}, blocking=True)
+    restored = mgr.restore(3, {"params": p_half, "moments": o_half.moments})
+    o_resume = dataclasses.replace(o_half, moments=restored["moments"]) if hasattr(o_half, "moments") else o_half
+    import repro.training.optimizer as opt_mod
+
+    o_resume = opt_mod.AdamWState(step=jnp.asarray(3), moments=restored["moments"])
+    p_resumed, _ = run(6, restored["params"], o_resume, start=3)
+    for a, b in zip(jax.tree_util.tree_leaves(p_full), jax.tree_util.tree_leaves(p_resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@given(gb=st.sampled_from([32, 256, 100]), old=st.integers(1, 8), new=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_elastic_plan_covers_batch_exactly(gb, old, new):
+    plan = elastic_plan(gb, old, new)
+    covered = []
+    for r, (start, size) in plan.items():
+        covered.extend(range(start, start + size))
+    assert sorted(covered) == list(range(gb))
+
+
+def test_watchdog_flags_persistent_straggler():
+    wd = StepWatchdog(n_hosts=4, slack=1.5, patience=2)
+    rep = None
+    for step in range(5):
+        for h in range(4):
+            dur = 1.0 if h != 2 else 3.0  # host 2 persistently slow
+            wd.report(h, step, dur)
+        rep = wd.snapshot(step)
+    assert rep is not None and rep.slow_hosts == (2,)
+    # transient blip must not flag
+    wd2 = StepWatchdog(n_hosts=4, slack=1.5, patience=3)
+    for step in range(4):
+        for h in range(4):
+            dur = 3.0 if (h == 1 and step == 2) else 1.0
+            wd2.report(h, step, dur)
+        rep2 = wd2.snapshot(step)
+    assert rep2.slow_hosts == ()
+
+
+def test_prefetcher_delivers_and_reports_wait():
+    dcfg = data_mod.DataConfig(vocab_size=64, seq_len=8, global_batch=2)
+    pf = data_mod.Prefetcher(data_mod.batches(dcfg), depth=2)
+    b = next(pf)
+    assert b["tokens"].shape == (2, 8)
+    assert pf.last_wait_s >= 0.0
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def test_offloaded_kv_decode_matches_resident():
+    cfg = ARCHS["granite-8b"].reduced()  # uniform dense stack
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    state_r = T.init_decode_state(cfg, B, cache_len=S, dtype=jnp.float32)
+    outs_r = []
+    for t in range(S):
+        lg, state_r = T.decode_step(params, cfg, toks[:, t : t + 1], state_r)
+        outs_r.append(lg[:, 0])
+
+    state_o = {"pos": jnp.zeros((), jnp.int32)}
+    blocks = D.make_kv_blocks(cfg, B, cache_len=S, npart=2, dtype=jnp.float32)
+    outs_o = []
+    for t in range(S):
+        lg, state_o, blocks = D.decode_step_offloaded(
+            params, cfg, toks[:, t : t + 1], state_o, blocks
+        )
+        blocks = [jax.tree_util.tree_map(lambda a: a, b) for b in blocks]
+        outs_o.append(lg[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs_r, 1)), np.asarray(jnp.stack(outs_o, 1)), atol=2e-5
+    )
+
+
+def test_greedy_generate_runs():
+    cfg = ARCHS["mamba2-780m"].reduced()
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(2), (2, 4), 0, cfg.vocab_size)
+    out = D.greedy_generate(params, cfg, prompt, n_new=4)
+    assert out.shape == (2, 8)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
