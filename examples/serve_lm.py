@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--prompt", type=int, default=12)
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--npart", type=int, default=2)
+    ap.add_argument("--kv-schedule", default="serial", choices=["serial", "prefetch", "donate"])
+    ap.add_argument("--kv-prefetch", type=int, default=1)
     args = ap.parse_args()
 
     from repro.configs import ARCHS
@@ -55,7 +57,8 @@ def main():
     st = {"pos": jnp.zeros((), jnp.int32)}
     blocks = D.make_kv_blocks(cfg, args.batch, cache_len=total, npart=args.npart,
                               dtype=jnp.float32)
-    ostep = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(p, cfg, t, s, b))
+    ostep = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(
+        p, cfg, t, s, b, schedule=args.kv_schedule, prefetch=args.kv_prefetch))
     for t in range(args.prompt):
         logits, st, blocks = ostep(params, prompt[:, t : t + 1], st, blocks)
     cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)

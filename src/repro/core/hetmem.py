@@ -56,29 +56,88 @@ def with_memory_kind(sharding, kind: str):
     return sharding.with_memory_kind(kind)
 
 
-_SPACE = {DEVICE: jax.memory.Space.Device, HOST: jax.memory.Space.Host}
+try:  # newer jax exposes memory spaces as a public enum
+    _SPACE = {DEVICE: jax.memory.Space.Device, HOST: jax.memory.Space.Host}
+except AttributeError:  # jax ≤ 0.4.x: string memory kinds via device_put targets
+    from jax._src.sharding_impls import TransferToMemoryKind
+
+    _SPACE = {DEVICE: TransferToMemoryKind(DEVICE), HOST: TransferToMemoryKind(HOST)}
 
 
-def _transfer(tree: Any, kind: str) -> Any:
-    """Stage a memory-space transfer for every leaf of ``tree`` inside jit."""
-    space = _SPACE[kind]
-    return jax.tree_util.tree_map(lambda x: jax.device_put(x, space), tree)
+@functools.lru_cache(maxsize=1)
+def _runtime_kinds() -> frozenset:
+    return frozenset(supported_memory_kinds())
+
+
+def transfers_supported() -> bool:
+    """True when the runtime distinguishes device vs host memory kinds.
+
+    The CPU test runtime advertises a single memory (``unpinned_host``); the
+    placements of Algorithm 3 are then *annotations* — semantically exact,
+    physically no-ops — and :func:`transfer` elides them entirely.
+    """
+    return HOST in _runtime_kinds()
+
+
+def _space_for(kind: str):
+    space = _SPACE.get(kind)
+    if space is not None:
+        return space
+    try:  # arbitrary advertised kinds (e.g. "unpinned_host") → string target
+        from jax._src.sharding_impls import TransferToMemoryKind
+
+        return TransferToMemoryKind(kind)
+    except ImportError:  # pragma: no cover - no string targets on this jax
+        return None
+
+
+def transfer_is_real(kind: str) -> bool:
+    """True when :func:`transfer` to ``kind`` stages an actual copy."""
+    return kind in _runtime_kinds() and _space_for(kind) is not None
+
+
+def transfer(tree: Any, kind: str) -> Any:
+    """Stage a memory-space transfer for every leaf of ``tree`` inside jit.
+
+    On single-memory runtimes (CPU test env) this is the identity: the
+    streamed loop keeps its exact trace order, only the copies vanish.
+    """
+    if kind not in _runtime_kinds():
+        return tree
+    space = _space_for(kind)
+    if space is None:
+        return tree
+
+    def put(x):
+        try:
+            return jax.device_put(x, space)
+        except ValueError:
+            # string-kind targets are jit-only; eagerly use a concrete sharding
+            sh = SingleDeviceSharding(jax.devices()[0], memory_kind=kind)
+            return jax.device_put(x, sh)
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+_transfer = transfer  # backwards-compatible alias
 
 
 def to_device(tree: Any) -> Any:
-    return _transfer(tree, DEVICE)
+    return transfer(tree, DEVICE)
 
 
 def to_host(tree: Any) -> Any:
-    return _transfer(tree, HOST)
+    return transfer(tree, HOST)
 
 
 def put_host(tree: Any, sharding=None) -> Any:
     """Eagerly place ``tree`` in host memory (outside jit).
 
     ``sharding`` may be a distributed sharding; defaults to the default
-    device's host memory.
+    device's host memory.  Identity on runtimes without a host memory kind.
     """
+    if not host_memory_available():
+        return tree
     if sharding is None:
         sharding = SingleDeviceSharding(jax.devices()[0], memory_kind=HOST)
     else:
@@ -130,6 +189,8 @@ def stream_blocks(
     broadcast: Sequence[Any] = (),
     offload: bool = True,
     collect: bool = False,
+    schedule: str = "serial",
+    prefetch: int = 1,
 ):
     """Algorithm 3: map ``fn`` over host-resident blocks with streamed I/O.
 
@@ -144,21 +205,22 @@ def stream_blocks(
     (e.g. this block's gradients); ``broadcast`` are shared device inputs
     (e.g. the solver's ``δu``).  With ``offload=False`` the transfers are
     elided and semantics are unchanged — the invariant the tests assert.
+
+    This is a thin compatibility wrapper over :class:`repro.core.stream.
+    StreamEngine` with the ``serial`` schedule (plus ``schedule``/``prefetch``
+    pass-throughs for callers that want the explicit-overlap executor).
     """
-    out_blocks: list[list[Any]] = []
-    extras: list[Any] = []
-    for j, blk in enumerate(state.blocks):
-        dev_blk = to_device(blk) if offload else blk
-        args = [pb[j] for pb in per_block]
-        result = fn(dev_blk, *args, *broadcast)
-        if collect:
-            new_blk, extra = result
-            extras.append(extra)
-        else:
-            new_blk = result
-        out_blocks.append(to_host(new_blk) if offload else new_blk)
-    new_state = PartitionedState(blocks=out_blocks, spec=state.spec)
-    return (new_state, extras) if collect else new_state
+    from repro.core.stream import StreamEngine, StreamPlan
+
+    plan = StreamPlan(
+        npart=len(state.blocks),
+        schedule=schedule,
+        prefetch=prefetch,
+        offload=offload,
+        collect=collect,
+    )
+    res = StreamEngine(plan).run(fn, state, per_block=per_block, broadcast=broadcast)
+    return (res.state, res.extras) if collect else res.state
 
 
 def stream_map(fn, state, *broadcast_args, offload: bool = True):
@@ -195,11 +257,6 @@ def concat_blocks(blocks: Sequence[Any], axis: int = 0) -> Any:
     import jax.numpy as jnp
 
     return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=axis), *blocks)
-
-
-@functools.lru_cache(maxsize=None)
-def _host_sharding_cache(devices_key, kind):  # pragma: no cover - trivial
-    raise NotImplementedError
 
 
 def named_host_sharding(mesh, spec: PartitionSpec) -> NamedSharding:

@@ -42,6 +42,8 @@ class OffloadConfig:
 
     optimizer_state: bool = False
     optimizer_npart: int = 8
+    optimizer_schedule: str = "serial"   # StreamEngine schedule for the update
+    optimizer_prefetch: int = 1          # copy-ahead depth for "prefetch"
     activations: bool = False
     activation_names: tuple[str, ...] = ("residual", "decoder_layer")
     kv_cache: bool = False
@@ -109,14 +111,19 @@ def offloaded_adamw_apply(
     cfg: AdamWConfig,
     *,
     offload: bool = True,
+    schedule: str = "serial",
+    prefetch: int = 1,
 ) -> tuple[Any, OffloadedAdamWState]:
-    """Streamed AdamW step (Algorithm 3).
+    """Streamed AdamW step (Algorithm 3 via the StreamEngine).
 
-    Per block j: moments_j host→device ‖ update compute of block j-1; the
-    unrolled chain lets XLA overlap.  New params stay device-resident (they
-    are the "D" of Algorithm 3); new moments return to host.
+    Per block j: moments_j host→device ‖ update compute of block j-1 (the
+    "prefetch" schedule makes the overlap explicit; "serial" leaves it to
+    XLA's scheduler).  New params stay device-resident (they are the "D" of
+    Algorithm 3); new moments return to host.
     Bit-identical to ``adamw_apply`` — asserted by tests.
     """
+    from repro.core.stream import StreamEngine, StreamPlan
+
     if cfg.grad_clip_norm:
         grads, _ = clip_by_global_norm(grads, cfg.grad_clip_norm)
     gblocks = group_like(grads, state.moments.spec)
@@ -130,13 +137,17 @@ def offloaded_adamw_apply(
             new_p.append(p2)
         return new_mv, new_p
 
-    new_moments, new_pblocks = hetmem.stream_blocks(
-        update_block,
-        state.moments,
-        per_block=(gblocks, pblocks),
+    plan = StreamPlan(
+        npart=len(state.moments.blocks),
+        schedule=schedule,
+        prefetch=prefetch,
         offload=offload,
         collect=True,
     )
+    res = StreamEngine(plan).run(
+        update_block, state.moments, per_block=(gblocks, pblocks)
+    )
+    new_moments, new_pblocks = res.state, res.extras
     flat = state.moments.spec.blocks_to_flat(new_pblocks)
     _, treedef = jax.tree_util.tree_flatten(params)
     new_params = jax.tree_util.tree_unflatten(treedef, flat)

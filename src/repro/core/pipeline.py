@@ -34,22 +34,23 @@ def pipeline_time(
     bytes_out_per_block: float,
     link_gbps: float,
     npart: int,
+    duplex: bool = True,
 ) -> StreamCost:
     """Time of the Algorithm-3 pipeline.
 
-    With double buffering, steady state costs ``max(t_c, t_in + t_out)`` per
-    block (in and out transfers share the link; GH200/TPU host links are
-    full-duplex so we also expose the duplex variant through
-    ``link_gbps`` being per-direction: we charge max(t_in, t_out)).
-    Pipeline fill adds one transfer-in, drain adds one transfer-out.
+    With double buffering, steady state costs ``max(t_c, t_xfer)`` per block.
+    ``duplex=True`` models a full-duplex host link (GH200 NVLink-C2C, TPU
+    host DMA): in/out transfers overlap each other → ``t_xfer = max(t_in,
+    t_out)``.  ``duplex=False`` models a shared half-duplex link where the
+    two directions serialize → ``t_xfer = t_in + t_out`` (how the paper
+    reports its 0.38 s/step transfer total).  Pipeline fill adds one
+    transfer-in, drain adds one transfer-out.
     """
     t_in = bytes_in_per_block / (link_gbps * 1e9)
     t_out = bytes_out_per_block / (link_gbps * 1e9)
-    t_xfer = max(t_in, t_out)  # full-duplex link: in/out overlap each other
+    t_xfer = max(t_in, t_out) if duplex else t_in + t_out
     t_c = compute_s_per_block
     steady = max(t_c, t_xfer)
-    pipelined = t_in + (npart - 1) * steady + max(t_c, t_out) + (t_out if t_c >= t_xfer else 0.0)
-    # Simpler, conservative closed form (matches paper's reported behaviour):
     pipelined = t_in + npart * steady + t_out
     serial = npart * (t_in + t_c + t_out)
     return StreamCost(
@@ -58,6 +59,85 @@ def pipeline_time(
         pipelined_s=pipelined,
         serial_s=serial,
         bound="compute" if t_c >= t_xfer else "transfer",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCostExt(StreamCost):
+    """:class:`StreamCost` extended with prefetch-depth and k-set terms."""
+
+    fill_s: float               # pipeline fill: first block's transfer-in
+    drain_s: float              # pipeline drain: last block's transfer-out
+    stall_s: float              # Σ expected per-block stall from transfer jitter
+    device_blocks: int          # device-resident block buffers (prefetch+1)
+    kset: int                   # ensemble members advanced per pass
+
+    @property
+    def pipelined_per_member_s(self) -> float:
+        """Wall time per ensemble member — the k-set amortization metric."""
+        return self.pipelined_s / self.kset
+
+
+def stream_time(
+    *,
+    compute_s_per_block: float,
+    bytes_in_per_block: float,
+    bytes_out_per_block: float,
+    link_gbps: float,
+    npart: int,
+    prefetch: int = 1,
+    kset: int = 1,
+    shared_bytes_per_block: float = 0.0,
+    kset_compute_marginal: float = 1.0,
+    jitter_frac: float = 0.0,
+    duplex: bool = True,
+) -> StreamCostExt:
+    """Cost model for a :class:`repro.core.stream.StreamPlan` execution.
+
+    Extends :func:`pipeline_time` along the two axes the StreamEngine adds:
+
+    *Prefetch depth* (``prefetch`` ≥ 1).  With deterministic per-block times,
+    depth beyond 1 cannot beat the double buffer — the steady-state bound
+    ``max(t_c, t_xfer)`` is already tight.  What deeper prefetch buys is
+    *jitter absorption*: with per-block transfer-time variation of
+    ``jitter_frac·t_xfer`` (stragglers, link contention, host paging), a
+    depth-``k`` queue averages the variation over ``k`` in-flight copies, so
+    the expected per-block stall is modeled as ``jitter_frac·t_xfer/k``.
+    The price is memory: ``prefetch+1`` device-resident block buffers.
+
+    *k-set ensembles* (``kset`` ≥ 1).  Each block carries ``kset`` members'
+    state (transfer scales ×kset) plus ``shared_bytes_per_block`` of operands
+    fetched once regardless of k (the 2SET amortization).  Per-block compute
+    scales as ``1 + (kset-1)·kset_compute_marginal``: marginal < 1 models the
+    batching win of memory-bound constitutive kernels — the paper's 2SET is
+    profitable exactly because the second set's marginal compute is cheap.
+    Divide ``pipelined_s`` by ``kset`` (``pipelined_per_member_s``) to compare
+    against unbatched passes.
+    """
+    if npart < 1 or prefetch < 1 or kset < 1:
+        raise ValueError(f"npart={npart}, prefetch={prefetch}, kset={kset} must be ≥ 1")
+    if not 0.0 <= jitter_frac:
+        raise ValueError(f"jitter_frac must be ≥ 0, got {jitter_frac}")
+    bw = link_gbps * 1e9
+    t_in = (kset * bytes_in_per_block + shared_bytes_per_block) / bw
+    t_out = kset * bytes_out_per_block / bw
+    t_xfer = max(t_in, t_out) if duplex else t_in + t_out
+    t_c = compute_s_per_block * (1.0 + (kset - 1) * kset_compute_marginal)
+    stall = jitter_frac * t_xfer / prefetch
+    steady = max(t_c, t_xfer) + stall
+    pipelined = t_in + npart * steady + t_out
+    serial = npart * (t_in + t_c + t_out)
+    return StreamCostExt(
+        compute_s=npart * t_c,
+        transfer_s=npart * (t_in + t_out),
+        pipelined_s=pipelined,
+        serial_s=serial,
+        bound="compute" if t_c >= t_xfer else "transfer",
+        fill_s=t_in,
+        drain_s=t_out,
+        stall_s=npart * stall,
+        device_blocks=prefetch + 1,
+        kset=kset,
     )
 
 

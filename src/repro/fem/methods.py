@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hetmem
+from repro.core.stream import StreamEngine, StreamPlan
 from repro.fem import assembly, multispring as ms, newmark, quadrature as quad, solver, spmv
 
 
@@ -35,6 +36,8 @@ class SeismicConfig:
     maxiter: int = 2000
     nspring: int = ms.NSPRING_DEFAULT
     npart: int = 4            # streaming blocks (Alg. 3)
+    schedule: str = "serial"  # StreamEngine schedule: serial | prefetch | donate
+    prefetch: int = 1         # copy-ahead depth for schedule="prefetch"
     inner_iters: int = 8      # fp32 inner PCG sweeps (EBE-IPCG preconditioner)
     omega0: float = 2.0 * np.pi * 1.0  # Rayleigh target frequency [rad/s]
     dtype: Any = None  # None → fp64 when x64 enabled, else fp32
@@ -220,18 +223,25 @@ def _resident_multispring(ops, eps_pts, springs):
 
 
 def _streamed_multispring(ops, eps_pts, springs_ps, block_params, offload=True):
-    """Algorithm 3: θ blocks host↔device, σ/D stay on device."""
-    npart = springs_ps.npart
+    """Algorithm 3 via the StreamEngine: θ blocks host↔device, σ/D on device."""
+    cfg = ops.cfg
+    npart = len(springs_ps.blocks)
     npts = eps_pts.shape[0]
     chunk = npts // npart
     eps_blocks = [eps_pts[j * chunk : (j + 1) * chunk] for j in range(npart)]
-    new_ps, extras = hetmem.stream_blocks(
-        ops.multispring_block,
-        springs_ps,
-        per_block=(eps_blocks, block_params),
+    plan = StreamPlan(
+        npart=npart,
+        schedule=cfg.schedule,
+        prefetch=cfg.prefetch,
         offload=offload,
         collect=True,
     )
+    res = StreamEngine(plan).run(
+        ops.multispring_block,
+        springs_ps,
+        per_block=(eps_blocks, block_params),
+    )
+    new_ps, extras = res.state, res.extras
     sigma = jnp.concatenate([e[0] for e in extras], axis=0)
     D = jnp.concatenate([e[1] for e in extras], axis=0)
     frac = jnp.concatenate([e[2] for e in extras], axis=0)
@@ -419,18 +429,19 @@ def run_ensemble(
     """2SET (Alg. 4): batch M ensemble cases through one device residency.
 
     The paper loads two problem sets at once into the GPU memory freed by
-    EBE; the TPU-native form is a vmap over the case dimension — every
+    EBE; the TPU-native form is a k-set axis over the case dimension — every
     solver iterate and constitutive update runs batched, doubling (M-fold)
-    arithmetic intensity at the memory cost of M state sets.  Streaming
-    (host-resident θ) is disabled inside vmap — 2SET is the *device-resident*
-    regime by construction; the ensemble driver in surrogate/dataset.py is
-    the streamed alternative when M sets don't fit.
+    arithmetic intensity at the memory cost of M state sets.  The ensemble
+    axis is the StreamEngine's ``kset``: here in its device-resident limit
+    (``npart=1``, no transfers, :meth:`StreamEngine.kmap`); the streamed
+    k-set regime (members' θ blocks stacked and streamed together) is what
+    surrogate/dataset.py batches through when M sets don't fit.
     """
     ops = FemOperators(mesh, cfg)
-    step, _ = make_step(method, ops, offload=False) if method != "proposed2" else (
-        make_step_ebe(ops, streamed=False), True)
-    if isinstance(step, tuple):  # make_step returns (step, streamed)
-        step = step[0]
+    if method == "proposed2":
+        step = make_step_ebe(ops, streamed=False)
+    else:
+        step, _ = make_step(method, ops, offload=False)
     carry0 = initial_carry(ops, streamed=False)
     obs_idx = jnp.asarray(observe if observe is not None else mesh.surface[:1])
 
@@ -443,5 +454,7 @@ def run_ensemble(
         return vel, auxes.iters
 
     waves = jnp.asarray(waves, cfg.rdtype)
-    vel, iters = jax.jit(jax.vmap(one_case))(waves)
+    M = waves.shape[0]
+    engine = StreamEngine(StreamPlan(npart=1, offload=False, kset=M))
+    vel, iters = jax.jit(lambda w: engine.kmap(one_case, w))(waves)
     return {"velocity_history": vel, "iters": iters}  # [M, nt, n_obs, 3]

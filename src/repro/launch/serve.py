@@ -40,6 +40,8 @@ def main():
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--offload-kv", action="store_true")
     ap.add_argument("--npart", type=int, default=2)
+    ap.add_argument("--kv-schedule", default="serial", choices=["serial", "prefetch", "donate"])
+    ap.add_argument("--kv-prefetch", type=int, default=1)
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--host-devices", type=int, default=0)
     args = ap.parse_args()
@@ -57,7 +59,9 @@ def main():
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[: len(dims)] if len(dims) == 2 else ("pod", "data", "model")
-        mesh = jax.make_mesh(dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        from repro.launch.mesh import make_auto_mesh
+
+        mesh = make_auto_mesh(dims, axes)
 
     total = args.prompt_len + args.new
     params, pspecs = T.init_params(cfg, jax.random.key(0))
@@ -71,7 +75,8 @@ def main():
             st = {"pos": jnp.zeros((), jnp.int32)}
             blocks = D.make_kv_blocks(cfg, args.batch, cache_len=total, npart=args.npart,
                                       dtype=jnp.dtype(cfg.dtype))
-            step = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(p, cfg, t, s, b))
+            step = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(
+                p, cfg, t, s, b, schedule=args.kv_schedule, prefetch=args.kv_prefetch))
             logits = None
             for t in range(args.prompt_len):
                 logits, st, blocks = step(params, prompt[:, t : t + 1], st, blocks)

@@ -75,7 +75,9 @@ def main():
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-        mesh = jax.make_mesh(dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        from repro.launch.mesh import make_auto_mesh
+
+        mesh = make_auto_mesh(dims, axes)
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     rules = sh.rules_for(cfg, mesh, kind="train", global_batch=global_batch, seq_len=seq)

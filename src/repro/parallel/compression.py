@@ -20,6 +20,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # newer jax: public entry point, replication check renamed to check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax ≤ 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
 
 def _compress_leaf(g: jnp.ndarray, r: jnp.ndarray, axis: str):
     g32 = g.astype(jnp.float32) + r
@@ -54,12 +62,12 @@ def compressed_mean_grads(grads: Any, residual: Any, mesh, axis: str = "pod", sp
         return jax.tree_util.tree_unflatten(treedef, out), jax.tree_util.tree_unflatten(treedef, res)
 
     specs = jax.tree_util.tree_map(lambda _: spec, grads)
-    return jax.shard_map(
+    return _shard_map(
         fn,
         mesh=mesh,
         in_specs=(specs, specs),
         out_specs=(specs, specs),
-        check_vma=False,
+        **{_CHECK_KW: False},
     )(grads, residual)
 
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import hetmem
+from repro.core.stream import StreamEngine, StreamPlan
 from repro.models import transformer as T
 
 
@@ -51,9 +52,17 @@ def decode_step_offloaded(
     kv_blocks: list[Any],      # host-resident per-group cache blocks
     *,
     offload: bool = True,
+    schedule: str = "serial",
+    prefetch: int = 1,
 ):
     """One decode step with layer-group-streamed KV (uniform stacks only:
-    dense GQA / MoE families).  Returns (logits, state, new_kv_blocks)."""
+    dense GQA / MoE families).  Returns (logits, state, new_kv_blocks).
+
+    The hidden state ``x`` is the StreamEngine's *carry*: it threads
+    sequentially through the layer-group blocks while the KV blocks round-trip
+    host↔device — prefetch of block ``j+k``'s cache is legal because the
+    transfers depend only on host state, not on the carry.
+    """
     assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global
     pos = state["pos"]
     positions = pos[None]
@@ -64,24 +73,30 @@ def decode_step_offloaded(
     g = L_total // npart
     pgroups = [_tree_slice(params["layers"], j * g, (j + 1) * g) for j in range(npart)]
 
-    new_blocks = []
-    for j in range(npart):
-        blk = hetmem.to_device(kv_blocks[j]) if offload else kv_blocks[j]
-
+    def group_fn(blk, h, lp):
         def body(carry, inp):
             h = carry
-            lp, cache = inp
+            lp_j, cache = inp
             c = {"k": cache["k"], "v": cache["v"], "pos": pos}
             if cfg.family == "moe":
-                h, nc, _aux = T._apply_moe_block(lp, h, cfg, positions=positions, cache=c)
+                h, nc, _aux = T._apply_moe_block(lp_j, h, cfg, positions=positions, cache=c)
             else:
                 h, nc = T._apply_attn_block(
-                    lp, h, cfg, positions=positions, window=cfg.window, cache=c
+                    lp_j, h, cfg, positions=positions, window=cfg.window, cache=c
                 )
             return h, {"k": nc["k"], "v": nc["v"]}
 
-        x, new_blk = jax.lax.scan(body, x, (pgroups[j], blk))
-        new_blocks.append(hetmem.to_host(new_blk) if offload else new_blk)
+        h, new_blk = jax.lax.scan(body, h, (lp, blk))
+        return new_blk, h
+
+    ps = hetmem.PartitionedState(
+        blocks=list(kv_blocks),
+        spec=hetmem.BlockSpec(treedef=None, block_of=(), npart=npart),
+    )
+    plan = StreamPlan(npart=npart, schedule=schedule, prefetch=prefetch, offload=offload)
+    res = StreamEngine(plan).run(group_fn, ps, per_block=(pgroups,), carry=x)
+    new_blocks = res.state.blocks
+    x = res.carry
 
     logits = T._unembed(params, cfg, x)
     state = dict(state)

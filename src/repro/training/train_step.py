@@ -80,7 +80,11 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         if isinstance(opt_state, OffloadedAdamWState):
-            new_params, new_state = offloaded_adamw_apply(grads, params, opt_state, tcfg.adamw)
+            new_params, new_state = offloaded_adamw_apply(
+                grads, params, opt_state, tcfg.adamw,
+                schedule=tcfg.offload.optimizer_schedule,
+                prefetch=tcfg.offload.optimizer_prefetch,
+            )
         else:
             new_params, new_state = adamw_apply(grads, params, opt_state, tcfg.adamw)
         return new_params, new_state, metrics

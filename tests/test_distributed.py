@@ -116,7 +116,9 @@ def test_dryrun_cell_on_host_mesh():
             ).lower(params, toks, state)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        assert compiled.cost_analysis()["flops"] > 0
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # older jax: per-device list
+        assert ca["flops"] > 0
         print("OK", mem.temp_size_in_bytes)
     """)
     assert "OK" in out

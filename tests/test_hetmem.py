@@ -31,8 +31,12 @@ def _params(key, widths=(8, 16, 4, 32, 12)):
 
 def test_memory_kinds_present():
     kinds = hetmem.supported_memory_kinds()
-    assert "device" in kinds
-    assert hetmem.host_memory_available(), kinds
+    assert kinds, "runtime must advertise at least one memory"
+    if hetmem.transfers_supported():  # TPU/GPU (or newer-jax CPU) runtimes
+        assert "device" in kinds
+        assert hetmem.host_memory_available(), kinds
+    else:  # single-memory runtime: placements are annotations (no-ops)
+        assert not hetmem.host_memory_available()
 
 
 @given(npart=st.integers(1, 12), nleaf=st.integers(1, 9))
@@ -89,10 +93,11 @@ def test_stream_map_inside_jit_with_host_state():
         out = hetmem.repin_state_to_host(jax.jit(step_fn)(ps, jnp.float32(3.0)))
     got = out.unpartition()
     np.testing.assert_allclose(np.asarray(got["a"]), np.arange(12.0) * 3.0)
-    # round-trip state should be back in host memory
-    for blk in out.blocks:
-        for leaf in blk:
-            assert leaf.sharding.memory_kind == hetmem.HOST
+    # round-trip state should be back in host memory (when the runtime has one)
+    if hetmem.host_memory_available():
+        for blk in out.blocks:
+            for leaf in blk:
+                assert leaf.sharding.memory_kind == hetmem.HOST
 
 
 def test_partition_arrays_roundtrip():

@@ -1,0 +1,149 @@
+"""Analytical pipeline model (core/pipeline.py): arithmetic + paper fixture.
+
+The regression anchor is §2.3 of the paper: on GH200, multi-spring block
+compute totals 0.33 s/step and CPU↔GPU transfer 0.38 s/step; the
+double-buffered pipeline lands at the transfer bound → 0.38 s/step, vs
+0.71 s unpipelined.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    StreamCost,
+    StreamCostExt,
+    breakeven_link_gbps,
+    pipeline_time,
+    stream_time,
+)
+
+NPART = 78  # paper: 7.8M elements in 0.1M-element blocks
+COMPUTE_TOTAL = 0.33
+TRANSFER_TOTAL = 0.38  # in + out per step, as the paper reports it
+
+
+def _paper_blocks():
+    """Per-block numbers reproducing the paper's totals on a 900 GB/s link."""
+    t_dir = TRANSFER_TOTAL / 2  # symmetric in/out
+    bytes_dir = t_dir * 900e9
+    return dict(
+        compute_s_per_block=COMPUTE_TOTAL / NPART,
+        bytes_in_per_block=bytes_dir / NPART,
+        bytes_out_per_block=bytes_dir / NPART,
+        link_gbps=900.0,
+        npart=NPART,
+    )
+
+
+def test_paper_gh200_regression_half_duplex():
+    """0.33 s compute / 0.38 s transfer → ≈0.38 s pipelined (transfer bound)."""
+    cost = pipeline_time(**_paper_blocks(), duplex=False)
+    assert cost.bound == "transfer"
+    # steady state = transfer total; fill+drain add one block's in+out (~0.5%)
+    fill_drain = TRANSFER_TOTAL / NPART
+    np.testing.assert_allclose(cost.pipelined_s, TRANSFER_TOTAL + fill_drain, rtol=1e-9)
+    np.testing.assert_allclose(cost.serial_s, COMPUTE_TOTAL + TRANSFER_TOTAL, rtol=1e-9)
+    # the paper's pipelining gain: 0.71/0.38 ≈ 1.87×
+    assert 1.8 < cost.speedup_from_overlap < 1.95
+
+
+def test_duplex_link_hides_transfers_behind_compute():
+    """Full duplex: each direction is 0.19 s < 0.33 s compute → compute bound."""
+    cost = pipeline_time(**_paper_blocks(), duplex=True)
+    assert cost.bound == "compute"
+    assert cost.pipelined_s < pipeline_time(**_paper_blocks(), duplex=False).pipelined_s
+    # steady = compute total, plus one block of fill+drain
+    np.testing.assert_allclose(
+        cost.pipelined_s, COMPUTE_TOTAL + TRANSFER_TOTAL / NPART, rtol=1e-9
+    )
+
+
+def test_fill_and_drain_terms():
+    cost = stream_time(**_paper_blocks())
+    assert isinstance(cost, StreamCostExt) and isinstance(cost, StreamCost)
+    # pipelined = fill + npart*steady + drain, with steady recoverable:
+    steady = (cost.pipelined_s - cost.fill_s - cost.drain_s) / NPART
+    assert steady >= max(COMPUTE_TOTAL, TRANSFER_TOTAL / 2) / NPART * (1 - 1e-9)
+    np.testing.assert_allclose(cost.fill_s, TRANSFER_TOTAL / 2 / NPART, rtol=1e-9)
+    np.testing.assert_allclose(cost.drain_s, TRANSFER_TOTAL / 2 / NPART, rtol=1e-9)
+
+
+def test_transfer_bound_classification_against_slow_link():
+    """PCIe Gen5 x16 (~63 GB/s) flips the workload transfer-bound (paper §2.3)."""
+    slow = dict(_paper_blocks(), link_gbps=63.0)
+    cost = pipeline_time(**slow)
+    assert cost.bound == "transfer"
+    assert cost.pipelined_s > pipeline_time(**_paper_blocks()).pipelined_s
+    be = breakeven_link_gbps(
+        compute_s_per_block=COMPUTE_TOTAL / NPART,
+        bytes_per_block=_paper_blocks()["bytes_in_per_block"],
+    )
+    assert 63.0 < be < 900.0
+
+
+def test_stream_time_reduces_to_pipeline_time():
+    """prefetch=1, kset=1, jitter=0 is exactly the classic closed form."""
+    for duplex in (True, False):
+        a = pipeline_time(**_paper_blocks(), duplex=duplex)
+        b = stream_time(**_paper_blocks(), duplex=duplex)
+        np.testing.assert_allclose(a.pipelined_s, b.pipelined_s, rtol=1e-12)
+        np.testing.assert_allclose(a.serial_s, b.serial_s, rtol=1e-12)
+        assert a.bound == b.bound
+
+
+def test_prefetch_depth_absorbs_jitter_monotonically():
+    times = [
+        stream_time(**_paper_blocks(), prefetch=k, jitter_frac=0.3).pipelined_s
+        for k in (1, 2, 4, 8)
+    ]
+    assert all(a >= b for a, b in zip(times, times[1:]))
+    assert times[0] > times[-1]  # depth genuinely helps under jitter
+    # deterministic transfers: depth is free of time cost, only memory
+    det = [
+        stream_time(**_paper_blocks(), prefetch=k).pipelined_s for k in (1, 4)
+    ]
+    np.testing.assert_allclose(det[0], det[1], rtol=1e-12)
+
+
+def test_prefetch_depth_costs_memory():
+    assert stream_time(**_paper_blocks(), prefetch=1).device_blocks == 2
+    assert stream_time(**_paper_blocks(), prefetch=3).device_blocks == 4
+
+
+def test_kset_amortizes_per_member_cost():
+    """2SET: with sub-linear marginal compute and shared operands, the
+    per-member pipelined time strictly improves with k."""
+    kw = dict(_paper_blocks(), kset_compute_marginal=0.6,
+              shared_bytes_per_block=_paper_blocks()["bytes_in_per_block"] * 0.5)
+    t1 = stream_time(**kw, kset=1).pipelined_per_member_s
+    t2 = stream_time(**kw, kset=2).pipelined_per_member_s
+    t4 = stream_time(**kw, kset=4).pipelined_per_member_s
+    assert t2 < t1 and t4 < t2
+    # linear marginal + no shared bytes → no amortization of the compute bound
+    flat = stream_time(**_paper_blocks(), kset=2, kset_compute_marginal=1.0)
+    base = stream_time(**_paper_blocks(), kset=1)
+    assert flat.pipelined_per_member_s >= base.pipelined_s / 2 * (1 - 1e-9)
+
+
+def test_kset_shifts_transfer_bound():
+    """Shared per-block operands amortize: transfer-bound at k=1 can become
+    compute-bound at larger k (the arithmetic-intensity argument for 2SET)."""
+    kw = dict(
+        compute_s_per_block=1e-3,
+        bytes_in_per_block=0.2e6,
+        bytes_out_per_block=0.2e6,
+        link_gbps=1.0,
+        npart=4,
+        shared_bytes_per_block=1.2e6,
+        kset_compute_marginal=1.0,
+    )
+    assert stream_time(**kw, kset=1).bound == "transfer"
+    assert stream_time(**kw, kset=8).bound == "compute"
+
+
+def test_stream_time_validation():
+    with pytest.raises(ValueError):
+        stream_time(**_paper_blocks(), prefetch=0)
+    with pytest.raises(ValueError):
+        stream_time(**_paper_blocks(), kset=0)
+    with pytest.raises(ValueError):
+        stream_time(**_paper_blocks(), jitter_frac=-0.1)

@@ -1,0 +1,309 @@
+"""StreamEngine invariants: every schedule is semantically transparent.
+
+``serial`` must be *bit-identical* to the resident (``offload=False``)
+computation — the acceptance invariant inherited from stream_blocks.
+``prefetch`` replays the same per-block op sequence (only transfer issue
+order changes) → also bitwise.  ``donate`` jits each block (fusion) → equal
+to fp rounding.  The k-set axis must equal a Python loop over members.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hetmem
+from repro.core.hetmem import PartitionedState
+from repro.core.stream import (
+    StreamEngine,
+    StreamPlan,
+    stack_kset_states,
+    unstack_kset_state,
+)
+
+
+def _state(npart=4, chunk=8, width=5, seed=0, kset=1):
+    rng = np.random.default_rng(seed)
+    def one():
+        blocks = [
+            [
+                jnp.asarray(rng.normal(size=(chunk, width)), jnp.float32),
+                jnp.asarray(rng.normal(size=(chunk,)), jnp.float32),
+            ]
+            for _ in range(npart)
+        ]
+        return PartitionedState(
+            blocks=blocks, spec=hetmem.BlockSpec(treedef=None, block_of=(), npart=npart)
+        )
+    if kset == 1:
+        return one()
+    return stack_kset_states([one() for _ in range(kset)])
+
+
+def _kernel(blk, scale):
+    a, b = blk
+    return [jnp.tanh(a * scale) + 0.25 * a, b * scale + 1.0]
+
+
+def _flat(state):
+    return np.concatenate([np.asarray(x).ravel() for blk in state.blocks for x in blk])
+
+
+def test_serial_bit_identical_to_resident():
+    ps = _state()
+    scale = jnp.float32(1.3)
+    plan_off = StreamPlan(npart=4, schedule="serial", offload=False)
+    plan_on = StreamPlan(npart=4, schedule="serial", offload=True)
+    res_off = StreamEngine(plan_off).run(_kernel, ps, broadcast=(scale,))
+    res_on = StreamEngine(plan_on).run(_kernel, ps, broadcast=(scale,))
+    np.testing.assert_array_equal(_flat(res_off.state), _flat(res_on.state))
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 7])
+def test_prefetch_bit_identical_to_serial(depth):
+    ps = _state()
+    scale = jnp.float32(0.7)
+    serial = StreamEngine(StreamPlan(npart=4)).run(_kernel, ps, broadcast=(scale,))
+    pre = StreamEngine(
+        StreamPlan(npart=4, schedule="prefetch", prefetch=depth)
+    ).run(_kernel, ps, broadcast=(scale,))
+    np.testing.assert_array_equal(_flat(serial.state), _flat(pre.state))
+
+
+def test_donate_matches_serial_to_rounding():
+    ps = _state()
+    scale = jnp.float32(0.7)
+    serial = StreamEngine(StreamPlan(npart=4)).run(_kernel, ps, broadcast=(scale,))
+    don = StreamEngine(StreamPlan(npart=4, schedule="donate")).run(
+        _kernel, ps, broadcast=(scale,)
+    )
+    np.testing.assert_allclose(_flat(serial.state), _flat(don.state), rtol=1e-6, atol=1e-7)
+
+
+def test_donate_inside_jit_falls_back_cleanly():
+    ps = _state()
+    engine = StreamEngine(StreamPlan(npart=4, schedule="donate"))
+
+    @jax.jit
+    def step(ps, scale):
+        return engine.run(_kernel, ps, broadcast=(scale,)).state
+
+    out = step(ps, jnp.float32(0.7))
+    ref = StreamEngine(StreamPlan(npart=4)).run(_kernel, ps, broadcast=(jnp.float32(0.7),))
+    np.testing.assert_allclose(_flat(out), _flat(ref.state), rtol=1e-6, atol=1e-7)
+
+
+def test_per_block_and_collect():
+    npart = 3
+    ps = _state(npart=npart)
+    extra_in = [jnp.float32(i + 1) for i in range(npart)]
+
+    def fn(blk, e):
+        a, b = blk
+        return [a + e, b], jnp.sum(a) * e
+
+    res = StreamEngine(StreamPlan(npart=npart, collect=True)).run(
+        fn, ps, per_block=(extra_in,)
+    )
+    assert len(res.extras) == npart
+    for j, (blk, e) in enumerate(zip(ps.blocks, extra_in)):
+        np.testing.assert_allclose(
+            np.asarray(res.state.blocks[j][0]), np.asarray(blk[0]) + float(e)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.extras[j]), np.sum(np.asarray(blk[0])) * float(e), rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("schedule", ["serial", "prefetch"])
+def test_carry_threads_sequentially(schedule):
+    """The carry must fold block-by-block like a sequential reduce."""
+    npart = 5
+    ps = _state(npart=npart)
+
+    def fn(blk, carry):
+        a, b = blk
+        new_carry = carry + jnp.sum(a) + jnp.sum(b)
+        return [a * 2.0, b], new_carry
+
+    res = StreamEngine(StreamPlan(npart=npart, schedule=schedule, prefetch=2)).run(
+        fn, ps, carry=jnp.float32(0.0)
+    )
+    expect = sum(float(jnp.sum(a) + jnp.sum(b)) for a, b in ps.blocks)
+    np.testing.assert_allclose(float(res.carry), expect, rtol=1e-5)
+
+
+def test_carry_with_collect():
+    npart = 3
+    ps = _state(npart=npart)
+
+    def fn(blk, carry):
+        a, b = blk
+        return [a, b], carry + 1.0, jnp.max(a)
+
+    res = StreamEngine(StreamPlan(npart=npart, collect=True)).run(
+        fn, ps, carry=jnp.float32(0.0)
+    )
+    assert float(res.carry) == npart
+    assert len(res.extras) == npart
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_kset_equals_member_loop(k):
+    """One k-set pass == k independent passes, member by member, bitwise."""
+    members = [_state(seed=s) for s in range(k)]
+    stacked = stack_kset_states(members)
+    scale = jnp.float32(1.1)
+    res = StreamEngine(StreamPlan(npart=4, kset=k)).run(
+        _kernel, stacked, broadcast=(scale,)
+    )
+    unstacked = unstack_kset_state(res.state, k)
+    for i, member in enumerate(members):
+        ref = StreamEngine(StreamPlan(npart=4)).run(_kernel, member, broadcast=(scale,))
+        np.testing.assert_array_equal(_flat(unstacked[i]), _flat(ref.state))
+
+
+def test_kmap_equals_vmap_loop():
+    k = 3
+    waves = jnp.asarray(np.random.default_rng(0).normal(size=(k, 6)), jnp.float32)
+    shift = jnp.float32(2.0)
+    fn = lambda w, s: jnp.cumsum(w) + s
+    engine = StreamEngine(StreamPlan(npart=1, offload=False, kset=k))
+    out = engine.kmap(fn, waves, broadcast=(shift,))
+    for i in range(k):
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(fn(waves[i], shift)))
+
+
+def test_kmap_checks_leading_axis():
+    engine = StreamEngine(StreamPlan(npart=1, offload=False, kset=4))
+    with pytest.raises(ValueError):
+        engine.kmap(lambda x: x, jnp.zeros((3, 2)))
+
+
+def test_run_checks_kset_axis_on_blocks():
+    """An unstacked state under a kset plan must error, not silently vmap."""
+    ps = _state(npart=4)
+    with pytest.raises(ValueError):
+        StreamEngine(StreamPlan(npart=4, kset=3)).run(
+            _kernel, ps, broadcast=(jnp.float32(1.0),)
+        )
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        StreamPlan(npart=0)
+    with pytest.raises(ValueError):
+        StreamPlan(npart=2, schedule="async")
+    with pytest.raises(ValueError):
+        StreamPlan(npart=2, prefetch=0)
+    with pytest.raises(ValueError):
+        StreamPlan(npart=2, kset=0)
+
+
+def test_run_validates_shapes():
+    ps = _state(npart=4)
+    with pytest.raises(ValueError):
+        StreamEngine(StreamPlan(npart=3)).run(_kernel, ps, broadcast=(jnp.float32(1.0),))
+    with pytest.raises(ValueError):
+        StreamEngine(StreamPlan(npart=4)).run(
+            lambda blk, e: blk, ps, per_block=([1.0, 2.0],)
+        )
+
+
+def test_device_buffer_accounting():
+    assert StreamPlan(npart=8).device_buffers == 2
+    assert StreamPlan(npart=8, schedule="donate").device_buffers == 2
+    assert StreamPlan(npart=8, schedule="prefetch", prefetch=3).device_buffers == 4
+    assert StreamPlan(npart=8, offload=False).device_buffers == 8
+
+
+def test_plan_with_runtime_advertised_memory_kinds():
+    """A plan naming whatever kinds the runtime actually advertises must run
+    (eager and under jit), not KeyError past the elision gate."""
+    kind = hetmem.supported_memory_kinds()[0]
+    ps = _state()
+    plan = StreamPlan(npart=4, host_kind=kind, device_kind=kind)
+    scale = jnp.float32(0.7)
+    res = StreamEngine(plan).run(_kernel, ps, broadcast=(scale,))
+    ref = StreamEngine(StreamPlan(npart=4, offload=False)).run(_kernel, ps, broadcast=(scale,))
+    np.testing.assert_array_equal(_flat(res.state), _flat(ref.state))
+    eng = StreamEngine(plan)
+    out = jax.jit(lambda p: eng.run(_kernel, p, broadcast=(scale,)).state)(ps)
+    np.testing.assert_allclose(_flat(out), _flat(ref.state), rtol=1e-6)
+
+
+def test_kset_stack_roundtrip():
+    members = [_state(seed=s) for s in range(3)]
+    stacked = stack_kset_states(members)
+    back = unstack_kset_state(stacked, 3)
+    for m, b in zip(members, back):
+        np.testing.assert_array_equal(_flat(m), _flat(b))
+
+
+# ---------------------------------------------------------------------------
+# cross-layer: the rewired call sites agree across schedules
+# ---------------------------------------------------------------------------
+
+
+def test_fem_prefetch_schedule_matches_serial():
+    """Proposed 2 with schedule="prefetch" reproduces the serial trajectory."""
+    import dataclasses as _dc
+
+    from repro.fem import meshgen, methods
+
+    mesh = meshgen.generate(2, 2, 2, pad_elems_to=4)
+    wave = np.zeros((4, 3), np.float32)
+    wave[1, 0] = 0.4
+    base = methods.SeismicConfig(tol=1e-6, maxiter=200, npart=2, nspring=12)
+    out_serial = methods.run(mesh, base, wave, method="proposed2")
+    out_pre = methods.run(
+        mesh, _dc.replace(base, schedule="prefetch", prefetch=2), wave, method="proposed2"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_serial["velocity_history"]), np.asarray(out_pre["velocity_history"])
+    )
+
+
+def test_offloaded_adamw_prefetch_matches_serial():
+    from repro.core.offload import OffloadConfig, offloaded_adamw_apply, offloaded_adamw_init
+    from repro.training.optimizer import AdamWConfig
+
+    rng = jax.random.key(0)
+    params = {
+        "w": jax.random.normal(rng, (8, 8)),
+        "b": jnp.zeros((8,)),
+        "v": jax.random.normal(jax.random.fold_in(rng, 1), (16,)),
+    }
+    grads = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.01, params)
+    cfg = AdamWConfig(learning_rate=1e-2, warmup_steps=1)
+    off = OffloadConfig(optimizer_state=True, optimizer_npart=2)
+    s1 = offloaded_adamw_init(params, cfg, off)
+    s2 = offloaded_adamw_init(params, cfg, off)
+    p1, _ = offloaded_adamw_apply(grads, params, s1, cfg, schedule="serial")
+    p2, _ = offloaded_adamw_apply(grads, params, s2, cfg, schedule="prefetch", prefetch=2)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_prefetch_matches_serial():
+    from repro.configs import ARCHS
+    from repro.models import transformer as T
+    from repro.serving import decode as D
+
+    cfg = ARCHS["granite-8b"].reduced()  # uniform dense stack
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    B, S = 1, 4
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    def roll(schedule):
+        state = {"pos": jnp.zeros((), jnp.int32)}
+        blocks = D.make_kv_blocks(cfg, B, cache_len=S, npart=2, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            lg, state, blocks = D.decode_step_offloaded(
+                params, cfg, toks[:, t : t + 1], state, blocks,
+                schedule=schedule, prefetch=2,
+            )
+            outs.append(np.asarray(lg[:, 0]))
+        return np.stack(outs, 1)
+
+    np.testing.assert_array_equal(roll("serial"), roll("prefetch"))
