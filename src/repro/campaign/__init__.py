@@ -1,0 +1,16 @@
+"""Production-scale ensemble time-history campaigns (paper §3).
+
+The paper's payoff is massive ensemble generation — 100 bedrock waves ×
+16,000 steps on the 32.5M-DOF Tokyo model — feeding the NN surrogate.  This
+package runs that workload as a *campaign*: the ensemble-case axis is
+sharded across the device mesh (each device advancing a ``kset`` batch of
+cases while streaming its host-resident spring state through the
+StreamEngine), rounds are checkpointed for exact mid-campaign resume, and
+remainder case counts are padded + masked so any ``n_waves`` works.
+"""
+from repro.campaign.runner import (  # noqa: F401
+    CampaignConfig,
+    CampaignResult,
+    make_campaign_chunk,
+    run_campaign,
+)

@@ -231,6 +231,22 @@ def stream_map_collect(fn, state, *broadcast_args, offload: bool = True):
     return stream_blocks(fn, state, broadcast=broadcast_args, offload=offload, collect=True)
 
 
+def check_divisible(n: int, npart: int, what: str = "axis size") -> int:
+    """Validate ``npart | n`` and return the chunk size.
+
+    The single divisibility gate for every Algorithm-3 block split: silent
+    truncation (``n // npart`` chunks dropping a remainder) corrupts physics
+    — trailing quadrature points would simply stop evolving — so all callers
+    (:func:`partition_arrays`, ``fem/methods.block_params``,
+    ``fem/methods._streamed_multispring``) raise the same error instead.
+    """
+    if npart < 1:
+        raise ValueError(f"npart must be ≥ 1, got {npart}")
+    if n % npart != 0:
+        raise ValueError(f"{what} {n} not divisible by npart={npart}")
+    return n // npart
+
+
 def partition_arrays(tree: Any, npart: int, axis: int = 0) -> list[Any]:
     """Split every leaf of ``tree`` into ``npart`` equal chunks along ``axis``.
 
@@ -240,9 +256,7 @@ def partition_arrays(tree: Any, npart: int, axis: int = 0) -> list[Any]:
     """
     leaves = jax.tree_util.tree_leaves(tree)
     n = leaves[0].shape[axis]
-    if n % npart != 0:
-        raise ValueError(f"axis size {n} not divisible by npart={npart}")
-    chunk = n // npart
+    chunk = check_divisible(n, npart)
 
     def take(x, j):
         idx = [slice(None)] * x.ndim

@@ -286,6 +286,41 @@ def stack_kset(trees: Sequence[Any]) -> Any:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
 
 
+def broadcast_kset(tree: Any, k: int) -> Any:
+    """Replicate one pytree ``k``-fold along a new leading ensemble axis.
+
+    The materialized form of ``stack_kset([tree] * k)`` — used to seed a
+    k-set batch whose members all start from the same initial state (every
+    ensemble case begins from the virgin constitutive state)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree
+    )
+
+
+def pad_kset(arr, multiple: int, axis: int = 0):
+    """Pad ``arr``'s ensemble axis up to a ``multiple`` → ``(padded, valid)``.
+
+    Remainder tolerance for k-set batching: when the case count is not a
+    multiple of ``kset × n_devices`` the tail batch is padded with repeats of
+    the last case (keeping the padded lanes numerically well-behaved) and
+    ``valid`` masks them out — `n_waves % (kset × n_devices)` need not be 0.
+    """
+    import numpy as np
+
+    n = arr.shape[axis]
+    if n == 0:
+        raise ValueError("cannot pad an empty ensemble axis")
+    pad = (-n) % multiple
+    valid = np.arange(n + pad) < n
+    if pad == 0:
+        return arr, valid
+    xp = jnp if isinstance(arr, jnp.ndarray) else np
+    idx = [slice(None)] * arr.ndim
+    idx[axis] = slice(n - 1, n)
+    filler = xp.repeat(arr[tuple(idx)], pad, axis=axis)
+    return xp.concatenate([arr, filler], axis=axis), valid
+
+
 def unstack_kset(tree: Any, k: int) -> list[Any]:
     """Inverse of :func:`stack_kset`."""
     return [jax.tree_util.tree_map(lambda x: x[i], tree) for i in range(k)]

@@ -112,11 +112,16 @@ class FemOperators:
         return ms.init_state(n_points, self.cfg.nspring, self.cfg.rdtype)
 
     def block_params(self, npart):
-        """SpringParams sliced per streamed block (static)."""
+        """SpringParams sliced per streamed block (static).
+
+        ``npart`` must divide the quadrature-point count — the same contract
+        as :func:`hetmem.partition_arrays`, enforced here too so a bad
+        ``npart`` fails loudly instead of silently dropping trailing points.
+        """
         P = self.params
         E, Q = self.mesh.n_elem, quad.NPOINT
         npts = E * Q
-        chunk = npts // npart
+        chunk = hetmem.check_divisible(npts, npart, "quadrature point count")
         out = []
         for j in range(npart):
             s = slice(j * chunk, (j + 1) * chunk)
@@ -138,7 +143,6 @@ class FemOperators:
     # ---- operators ---------------------------------------------------------
     def crs_update(self, D, beta_e, alpha):
         """UpdateCRS: assemble A's BCSR values + block-Jacobi inverse."""
-        cm, cd = newmark.a_coefficients(self.cfg.dt, float(0.0))  # α folded below
         K_e = assembly.element_stiffness(D, self.Jinv, self.wdet)
         coef = 1.0 + (2.0 / self.cfg.dt) * beta_e
         valA = assembly.assemble_bcsr(K_e * coef[:, None, None], self.mesh.entry_map, self.nnzb)
@@ -227,7 +231,7 @@ def _streamed_multispring(ops, eps_pts, springs_ps, block_params, offload=True):
     cfg = ops.cfg
     npart = len(springs_ps.blocks)
     npts = eps_pts.shape[0]
-    chunk = npts // npart
+    chunk = hetmem.check_divisible(npts, npart, "quadrature point count")
     eps_blocks = [eps_pts[j * chunk : (j + 1) * chunk] for j in range(npart)]
     plan = StreamPlan(
         npart=npart,
@@ -419,6 +423,24 @@ def run(
     }
 
 
+def make_ensemble_step(ops: FemOperators, method: str, *, offload: bool = False):
+    """(step, carry0) for one ensemble member — carry always matches the step.
+
+    ``proposed2`` takes its device-resident 2SET limit (Alg. 4): resident
+    springs, no streaming — the regime the k-set residency batches.  Every
+    other name keeps its :func:`make_step` form (``proposed1`` streams a
+    :class:`~repro.core.hetmem.PartitionedState`, so it gets the matching
+    ``streamed`` carry, not a resident spring dict).  Raises ``KeyError`` for
+    names outside :data:`METHODS`.
+    """
+    if method == "proposed2":
+        step, streamed = make_step_ebe(ops, streamed=False), False
+    else:
+        step, streamed = make_step(method, ops, offload=offload)
+    carry0 = initial_carry(ops, streamed=streamed, host=False)
+    return step, carry0
+
+
 def run_ensemble(
     mesh,
     cfg: SeismicConfig,
@@ -435,14 +457,12 @@ def run_ensemble(
     axis is the StreamEngine's ``kset``: here in its device-resident limit
     (``npart=1``, no transfers, :meth:`StreamEngine.kmap`); the streamed
     k-set regime (members' θ blocks stacked and streamed together) is what
-    surrogate/dataset.py batches through when M sets don't fit.
+    surrogate/dataset.py batches through when M sets don't fit.  For
+    sharded multi-round campaigns with checkpoint/resume, see
+    :mod:`repro.campaign`.
     """
     ops = FemOperators(mesh, cfg)
-    if method == "proposed2":
-        step = make_step_ebe(ops, streamed=False)
-    else:
-        step, _ = make_step(method, ops, offload=False)
-    carry0 = initial_carry(ops, streamed=False)
+    step, carry0 = make_ensemble_step(ops, method)
     obs_idx = jnp.asarray(observe if observe is not None else mesh.surface[:1])
 
     def one_case(wave):

@@ -1,0 +1,34 @@
+"""Pre-jax-import bootstrap.
+
+Forcing N virtual host devices must happen before jax initializes its
+backends, so every launcher parses its device flag *before* ``import jax``.
+This helper is the single implementation (launch/train.py,
+launch/campaign.py, examples/ensemble_surrogate.py and
+benchmarks/campaign_bench.py all bootstrap through it) — it must therefore
+never import jax itself.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(flag: str = "--host-devices", default: int = 0) -> int:
+    """Parse ``flag`` from ``sys.argv`` and force that many virtual host
+    devices via ``XLA_FLAGS``.  Call before the first ``import jax``.
+
+    A count already present in ``XLA_FLAGS`` (e.g. set by CI or a test
+    harness) wins — appending a second, conflicting
+    ``--xla_force_host_platform_device_count`` would be undefined.
+    Returns the requested count (0 = not requested).
+    """
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument(flag, type=int, default=default, dest="n")
+    args, _ = ap.parse_known_args()
+    if args.n and _FORCE_FLAG not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + f" {_FORCE_FLAG}={args.n}"
+        )
+    return args.n

@@ -35,3 +35,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device host tests (8 forced host devices)."""
     return make_auto_mesh(shape, axes)
+
+
+def make_case_mesh(n_devices: int | None = None, axis: str = "case"):
+    """1-D mesh over the ensemble-case axis for campaign sharding.
+
+    Ensemble time-history cases are embarrassingly parallel (no halo, no
+    collective): one mesh axis over all (or the first ``n_devices``) local
+    devices is the whole story.  Each device then streams its own members'
+    host-resident spring state through the StreamEngine.
+    """
+    n = n_devices or len(jax.devices())
+    if n > len(jax.devices()):
+        raise ValueError(f"requested {n} devices, have {len(jax.devices())}")
+    return make_auto_mesh((n,), (axis,))

@@ -11,23 +11,10 @@ data → watchdog → async checkpoints, and resumes from the latest checkpoint
 if one exists (fault tolerance: kill it mid-run and relaunch).
 """
 import argparse
-import os
-import sys
 
+from repro.launch.bootstrap import force_host_devices
 
-def _early_args():
-    ap = argparse.ArgumentParser(add_help=False)
-    ap.add_argument("--host-devices", type=int, default=0)
-    args, _ = ap.parse_known_args()
-    if args.host_devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.host_devices}"
-        )
-    return args
-
-
-_early_args()
+force_host_devices()
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402
@@ -96,10 +83,10 @@ def main():
 
         mgr = CheckpointManager(args.ckpt_dir)
         start = 0
-        if mgr.latest_step() is not None:
-            start = mgr.latest_step()
-            restored = mgr.restore(start, {"params": params}, shardings={"params": pshard})
-            params = restored["params"]
+        restored = mgr.restore_latest({"params": params}, shardings={"params": pshard})
+        if restored is not None:
+            start, state = restored
+            params = state["params"]
             print(f"[resume] from checkpoint step {start}")
 
         dcfg = data_mod.DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,

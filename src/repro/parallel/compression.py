@@ -13,20 +13,13 @@ lineage).  Implementation is shard_map over the compressed axis:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # newer jax: public entry point, replication check renamed to check_vma
-    _shard_map = jax.shard_map
-    _CHECK_KW = "check_vma"
-except AttributeError:  # jax ≤ 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = "check_rep"
+from repro.parallel.sharding import shard_map
 
 
 def _compress_leaf(g: jnp.ndarray, r: jnp.ndarray, axis: str):
@@ -62,13 +55,9 @@ def compressed_mean_grads(grads: Any, residual: Any, mesh, axis: str = "pod", sp
         return jax.tree_util.tree_unflatten(treedef, out), jax.tree_util.tree_unflatten(treedef, res)
 
     specs = jax.tree_util.tree_map(lambda _: spec, grads)
-    return _shard_map(
-        fn,
-        mesh=mesh,
-        in_specs=(specs, specs),
-        out_specs=(specs, specs),
-        **{_CHECK_KW: False},
-    )(grads, residual)
+    return shard_map(fn, mesh, in_specs=(specs, specs), out_specs=(specs, specs))(
+        grads, residual
+    )
 
 
 def init_residual(grads_like: Any) -> Any:

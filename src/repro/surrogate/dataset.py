@@ -4,16 +4,23 @@
 The paper's production run uses 100 waves × 16,000 steps on the 32.5M-DOF
 Tokyo-site model — generated under the heterogeneous-memory method at scale.
 Here the same *pipeline* runs on the synthetic basin at test scale; the
-ensemble driver streams cases through ``methods.run`` (Proposed Method 2),
-which is the workload the paper's 2SET optimization batches per device.
+ensemble advances through :mod:`repro.campaign` — the case axis sharded over
+the device mesh, ``kset`` members batched per device (2SET), rounds
+checkpointed for exact resume — and lands in ``.npz`` dataset shards the
+surrogate trainer streams back in.
 """
 from __future__ import annotations
 
 import dataclasses
+import glob
+import json
+import os
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.campaign import CampaignConfig, run_campaign
 from repro.fem import meshgen, methods
 
 
@@ -28,7 +35,7 @@ class EnsembleConfig:
     mesh_n: tuple = (3, 3, 3)
     nspring: int = 12
     seed: int = 0
-    kset: int = 2              # ensemble members batched per residency (2SET)
+    kset: int = 2              # ensemble members batched per device (2SET)
 
 
 def random_band_limited_waves(cfg: EnsembleConfig) -> np.ndarray:
@@ -44,26 +51,92 @@ def random_band_limited_waves(cfg: EnsembleConfig) -> np.ndarray:
     return np.fft.irfft(W, n=cfg.nt, axis=1)
 
 
-def generate(cfg: EnsembleConfig, method: str = "proposed2"):
-    """→ (waves [N,nt,3], responses [N,nt,3] at the max-response point).
-
-    Cases advance in k-set batches of ``cfg.kset`` through the StreamEngine's
-    ensemble axis (``methods.run_ensemble``): each residency amortizes the
-    mesh/solver operands across ``kset`` members — the paper's 2SET, sized by
-    how many state sets fit.  ``kset=1`` degenerates to one case per pass.
-    """
-    mesh = meshgen.generate(*cfg.mesh_n, pad_elems_to=8)
-    sim = methods.SeismicConfig(
+def simulation_config(cfg: EnsembleConfig) -> methods.SeismicConfig:
+    return methods.SeismicConfig(
         dt=cfg.dt, tol=1e-6, maxiter=400, npart=2, nspring=cfg.nspring,
         dtype=jnp.float64 if jnp.zeros(()).dtype == jnp.float64 else jnp.float32,
     )
+
+
+def generate(
+    cfg: EnsembleConfig,
+    method: str = "proposed2",
+    *,
+    device_mesh=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+):
+    """→ (waves [N,nt,3], responses [N,nt,3] at the max-response point).
+
+    Cases advance as a :mod:`repro.campaign`: ``cfg.kset`` members per
+    device per round (the paper's 2SET, sized by how many state sets fit),
+    the case axis sharded over ``device_mesh`` when given, checkpointed into
+    ``checkpoint_dir`` so an interrupted generation resumes bit-identically.
+    ``n_waves`` need not divide the round size — the tail is padded+masked.
+    """
+    mesh = meshgen.generate(*cfg.mesh_n, pad_elems_to=8)
+    sim = simulation_config(cfg)
     waves = random_band_limited_waves(cfg)
     # observation point: surface node nearest the basin slope (max response)
     obs = mesh.surface[len(mesh.surface) // 2 : len(mesh.surface) // 2 + 1]
-    k = max(1, cfg.kset)
-    responses = []
-    for lo in range(0, cfg.n_waves, k):
-        batch = waves[lo : lo + k]
-        out = methods.run_ensemble(mesh, sim, batch, observe=obs, method=method)
-        responses.append(np.asarray(out["velocity_history"][:, :, 0, :]))
-    return waves.astype(np.float32), np.concatenate(responses).astype(np.float32)
+    res = run_campaign(
+        mesh, sim, waves, observe=obs,
+        campaign=CampaignConfig(
+            kset=max(1, cfg.kset), method=method, seed=cfg.seed,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        ),
+        device_mesh=device_mesh,
+    )
+    responses = res.velocity_history[:, :, 0, :]
+    return waves.astype(np.float32), np.asarray(responses).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# dataset shards: campaign output → files the surrogate trainer streams
+# ---------------------------------------------------------------------------
+
+
+def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 16) -> list[str]:
+    """Write ``(x, y)`` as ``shard_NNNNN.npz`` files + an index manifest.
+
+    Pre-existing ``shard_*.npz`` files are removed first: a rerun with a
+    smaller ensemble must not leave stale shards from the previous run to be
+    silently concatenated back in by :func:`load_shards`."""
+    if len(x) != len(y):
+        raise ValueError(f"waves/responses length mismatch: {len(x)} vs {len(y)}")
+    os.makedirs(directory, exist_ok=True)
+    for stale in glob.glob(os.path.join(directory, "shard_*.npz")):
+        os.remove(stale)
+    paths = []
+    for s, lo in enumerate(range(0, len(x), shard_size)):
+        p = os.path.join(directory, f"shard_{s:05d}.npz")
+        np.savez(p, x=x[lo : lo + shard_size], y=y[lo : lo + shard_size])
+        paths.append(p)
+    with open(os.path.join(directory, "index.json"), "w") as f:
+        json.dump({"n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths)}, f)
+    return paths
+
+
+def load_shards(directory: str) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate every ``shard_*.npz`` in ``directory`` back to (x, y),
+    validated against the index manifest when one is present."""
+    paths = sorted(glob.glob(os.path.join(directory, "shard_*.npz")))
+    if not paths:
+        raise FileNotFoundError(f"no dataset shards under {directory}")
+    xs, ys = [], []
+    for p in paths:
+        with np.load(p) as z:
+            xs.append(z["x"])
+            ys.append(z["y"])
+    x, y = np.concatenate(xs), np.concatenate(ys)
+    index = os.path.join(directory, "index.json")
+    if os.path.exists(index):
+        with open(index) as f:
+            meta = json.load(f)
+        if meta.get("shards") != len(paths) or meta.get("n") != len(x):
+            raise ValueError(
+                f"shard directory {directory} inconsistent with its index "
+                f"({len(paths)} shards / {len(x)} rows vs manifest {meta}) — "
+                f"regenerate with save_shards"
+            )
+    return x, y

@@ -85,6 +85,18 @@ def fit(
     return params, info
 
 
+def fit_shards(cfg: SurrogateConfig, shard_dir: str, **kw) -> tuple[Any, dict]:
+    """:func:`fit` on a campaign-written dataset shard directory.
+
+    The campaign → shards → trainer handoff: generation and training need
+    not share a process (the paper's production run generates on the big
+    machine, trains elsewhere)."""
+    from repro.surrogate.dataset import load_shards
+
+    x, y = load_shards(shard_dir)
+    return fit(cfg, x, y, **kw)
+
+
 def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):
     """Random search over the paper's space; returns best (cfg, params, info)."""
     rng = np.random.default_rng(seed)

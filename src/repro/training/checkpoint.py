@@ -85,6 +85,19 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_latest(
+        self,
+        like: dict[str, Any],
+        shardings: Optional[dict[str, Any]] = None,
+    ) -> Optional[tuple[int, dict[str, Any]]]:
+        """``(step, state)`` from the newest checkpoint, or ``None`` if the
+        directory holds none — the resume-or-start-fresh idiom shared by the
+        training launcher and the campaign runner."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        return step, self.restore(step, like, shardings=shardings)
+
     def restore(
         self,
         step: int,

@@ -1,0 +1,280 @@
+"""Campaign subsystem: sharded k-set ensemble rounds, checkpoint/resume,
+remainder pad+mask — plus the streamed-ensemble correctness fixes
+(run_ensemble carry/step match, no silent npart truncation)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import CampaignConfig, run_campaign
+from repro.campaign.runner import _chunk_bounds
+from repro.core import hetmem
+from repro.fem import meshgen, methods, quadrature as quad
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def x64():
+    with jax.enable_x64(True):
+        yield
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return meshgen.generate(2, 2, 2, pad_elems_to=4)
+
+
+def _waves(M, nt, seed=0):
+    rng = np.random.default_rng(seed)
+    w = np.zeros((M, nt, 3))
+    w[:, :, 0] = 0.3 * rng.normal(size=(M, nt))
+    return w
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", 0.01)
+    kw.setdefault("tol", 1e-8)
+    kw.setdefault("maxiter", 600)
+    kw.setdefault("npart", 2)
+    kw.setdefault("nspring", 12)
+    return methods.SeismicConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# streamed-ensemble correctness fixes
+# ---------------------------------------------------------------------------
+
+
+def test_run_ensemble_matches_run_all_methods(mesh, x64):
+    """Every METHODS name — including the formerly broken proposed1, whose
+    streamed step got a resident carry — matches the per-case driver."""
+    cfg = _cfg()
+    waves = _waves(2, 4)
+    for method in methods.METHODS:
+        ens = methods.run_ensemble(mesh, cfg, waves, method=method)
+        assert ens["velocity_history"].shape[0] == 2
+        for i in range(2):
+            one = methods.run(mesh, cfg, waves[i], method=method)
+            ref = np.asarray(one["velocity_history"])
+            np.testing.assert_allclose(
+                np.asarray(ens["velocity_history"][i]), ref,
+                atol=1e-9 * (np.abs(ref).max() + 1e-30), rtol=0,
+                err_msg=method,
+            )
+
+
+def test_ensemble_step_carry_matches_step(mesh, x64):
+    """make_ensemble_step pairs a streamed step with a PartitionedState carry
+    (and a resident step with a resident dict) for every method."""
+    cfg = _cfg()
+    ops = methods.FemOperators(mesh, cfg)
+    for method in methods.METHODS:
+        _, carry0 = methods.make_ensemble_step(ops, method)
+        springs = carry0[1]
+        if method == "proposed1":  # streamed CRS: partitioned spring state
+            assert isinstance(springs, hetmem.PartitionedState)
+            assert len(springs.blocks) == cfg.npart
+        else:  # baselines resident; proposed2 takes its 2SET resident limit
+            assert isinstance(springs, dict)
+    with pytest.raises(KeyError):
+        methods.make_ensemble_step(ops, "nonesuch")
+
+
+def test_non_divisible_npart_raises(mesh):
+    """No silent remainder truncation: block_params and the streamed update
+    reject npart ∤ npts exactly like hetmem.partition_arrays."""
+    npts = mesh.n_elem * quad.NPOINT
+    bad = 7
+    assert npts % bad != 0
+    ops = methods.FemOperators(mesh, _cfg(npart=bad))
+    with pytest.raises(ValueError, match="not divisible"):
+        ops.block_params(bad)
+    with pytest.raises(ValueError, match="not divisible"):
+        methods.initial_carry(ops, streamed=True)  # partition_arrays gate
+    # the streamed update itself validates too (state partitioned elsewhere)
+    springs = ops.init_springs(npts)
+    blocks = [
+        [jax.tree_util.tree_map(lambda x: x[: npts // bad], springs)[k]
+         for k in methods.FemOperators._state_keys]
+        for _ in range(bad)
+    ]
+    from repro.utils.tree import BlockSpec
+
+    ps = hetmem.PartitionedState(
+        blocks=blocks, spec=BlockSpec(treedef=None, block_of=(), npart=bad)
+    )
+    eps = jnp.zeros((npts, 6), ops.cfg.rdtype)
+    with pytest.raises(ValueError, match="not divisible"):
+        methods._streamed_multispring(ops, eps, ps, None)
+
+
+def test_check_divisible():
+    assert hetmem.check_divisible(12, 4) == 3
+    with pytest.raises(ValueError, match="not divisible"):
+        hetmem.check_divisible(10, 4)
+    with pytest.raises(ValueError, match="npart"):
+        hetmem.check_divisible(10, 0)
+
+
+# ---------------------------------------------------------------------------
+# campaign: pad+mask, chunking, checkpoint/resume
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_bounds():
+    assert _chunk_bounds(10, 0) == [(0, 10)]
+    assert _chunk_bounds(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert _chunk_bounds(10, 100) == [(0, 10)]
+
+
+def test_campaign_remainder_pad_mask(mesh, x64):
+    """n_waves=3 with rounds of 2: the padded lane is masked out and every
+    real case matches the per-case driver."""
+    cfg = _cfg()
+    waves = _waves(3, 4)
+    res = run_campaign(
+        mesh, cfg, waves,
+        campaign=CampaignConfig(kset=2, method="proposed1"),
+    )
+    assert res.completed and res.rounds_done == 2
+    assert res.velocity_history.shape[0] == 3
+    for i in range(3):
+        one = methods.run(mesh, cfg, waves[i], method="proposed1")
+        ref = np.asarray(one["velocity_history"])
+        np.testing.assert_allclose(
+            res.velocity_history[i], ref,
+            atol=1e-9 * (np.abs(ref).max() + 1e-30), rtol=0,
+        )
+
+
+def test_campaign_resume_bit_identical(mesh, x64, tmp_path):
+    """checkpoint → kill → resume reproduces the uninterrupted
+    velocity_history bit-for-bit (the acceptance invariant)."""
+    cfg = _cfg()
+    waves = _waves(3, 6, seed=1)
+    base = run_campaign(
+        mesh, cfg, waves,
+        campaign=CampaignConfig(kset=2, method="proposed1", checkpoint_every=2),
+    )
+    assert base.completed
+
+    cc = CampaignConfig(
+        kset=2, method="proposed1",
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=2,
+    )
+    part = run_campaign(mesh, cfg, waves, campaign=cc, stop_after_steps=7)
+    assert not part.completed
+    assert part.steps_done < 2 * 6  # genuinely mid-campaign
+    res = run_campaign(mesh, cfg, waves, campaign=cc)
+    assert res.completed and res.resumed_from is not None
+    assert np.array_equal(res.velocity_history, base.velocity_history)
+    assert np.array_equal(res.iters, base.iters)
+    # re-invoking a finished campaign is a pure restore, still identical
+    again = run_campaign(mesh, cfg, waves, campaign=cc)
+    assert again.completed
+    assert np.array_equal(again.velocity_history, base.velocity_history)
+
+
+def test_campaign_rejects_foreign_checkpoint(mesh, x64, tmp_path):
+    cfg = _cfg()
+    cc = CampaignConfig(
+        kset=2, method="proposed1", seed=0,
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=2,
+    )
+    run_campaign(mesh, cfg, _waves(2, 4), campaign=cc, stop_after_steps=2)
+    other = CampaignConfig(
+        kset=2, method="proposed1", seed=1,  # different wave set
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_every=2,
+    )
+    with pytest.raises(ValueError, match="different campaign"):
+        run_campaign(mesh, cfg, _waves(2, 4), campaign=other)
+    # a different *method* must not splice either (baseline1's carry has the
+    # same pytree structure, so only the signature can catch this)
+    switched = dataclasses.replace(cc, method="baseline1")
+    with pytest.raises(ValueError, match="different campaign"):
+        run_campaign(mesh, cfg, _waves(2, 4), campaign=switched)
+    # and neither must changed physics (e.g. a different time step)
+    with pytest.raises(ValueError, match="different campaign"):
+        run_campaign(mesh, _cfg(dt=0.02), _waves(2, 4), campaign=cc)
+    # nor different wave *data* of the same shape (sig hashes the waves,
+    # not just the config seed)
+    with pytest.raises(ValueError, match="different campaign"):
+        run_campaign(mesh, cfg, _waves(2, 4, seed=9), campaign=cc)
+
+
+def test_pad_kset_helpers():
+    from repro.core.stream import broadcast_kset, pad_kset
+
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    p, valid = pad_kset(a, 4)
+    assert p.shape == (4, 4) and valid.tolist() == [True] * 3 + [False]
+    np.testing.assert_array_equal(p[3], a[2])  # padded with last-case repeat
+    p2, v2 = pad_kset(a, 3)
+    assert p2.shape == (3, 4) and v2.all()
+    with pytest.raises(ValueError):
+        pad_kset(a[:0], 2)
+    t = broadcast_kset({"x": jnp.ones((2,))}, 3)
+    assert t["x"].shape == (3, 2)
+
+
+# ---------------------------------------------------------------------------
+# sharded campaign on forced host devices (subprocess: device count must be
+# set before jax initializes)
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_campaign_sharded_matches_and_resumes():
+    """2-device case-sharded campaign: equals the single-device trajectory
+    and survives kill-and-resume bit-identically."""
+    out = _run("""
+        import jax
+        jax.config.update('jax_enable_x64', True)
+        import numpy as np, tempfile
+        from repro.campaign import CampaignConfig, run_campaign
+        from repro.fem import meshgen, methods
+        from repro.launch.mesh import make_case_mesh
+
+        assert len(jax.devices()) == 2
+        mesh = meshgen.generate(2, 2, 2, pad_elems_to=4)
+        cfg = methods.SeismicConfig(dt=0.01, tol=1e-8, maxiter=600, npart=2, nspring=12)
+        rng = np.random.default_rng(0)
+        waves = np.zeros((5, 6, 3)); waves[:, :, 0] = 0.3 * rng.normal(size=(5, 6))
+        dmesh = make_case_mesh(2)
+
+        single = run_campaign(mesh, cfg, waves,
+                              campaign=CampaignConfig(kset=2, method='proposed2', checkpoint_every=3))
+        sharded = run_campaign(mesh, cfg, waves,
+                               campaign=CampaignConfig(kset=2, method='proposed2', checkpoint_every=3),
+                               device_mesh=dmesh)
+        scale = np.abs(single.velocity_history).max() + 1e-30
+        assert np.abs(sharded.velocity_history - single.velocity_history).max() < 1e-9 * scale
+
+        d = tempfile.mkdtemp()
+        cc = CampaignConfig(kset=2, method='proposed2', checkpoint_dir=d, checkpoint_every=3)
+        part = run_campaign(mesh, cfg, waves, campaign=cc, device_mesh=dmesh, stop_after_steps=7)
+        assert not part.completed
+        res = run_campaign(mesh, cfg, waves, campaign=cc, device_mesh=dmesh)
+        assert res.completed and res.resumed_from is not None
+        assert np.array_equal(res.velocity_history, sharded.velocity_history)
+        print('OK')
+    """)
+    assert "OK" in out
