@@ -15,16 +15,24 @@ devices are virtual (``--xla_force_host_platform_device_count``), so the
 win comes from batching + single-compilation amortization rather than real
 parallel silicon; on a TPU/GPU mesh the same file measures real scaling.
 
+``--processes N`` adds a **multi-host scaling** section: the bench respawns
+itself as N ``jax.distributed`` CPU processes (1 forced host device each)
+sharing one coordination service, each owning its slice of the case axis
+exactly as a cluster campaign would, and reports whole-ensemble throughput
+— the zero→cluster rehearsal of the paper's node-parallel production run.
+
 Usage:
     PYTHONPATH=src python benchmarks/campaign_bench.py [--smoke] [--out PATH] \
-        [--devices 2] [--waves 8] [--nt 16]
+        [--devices 2] [--waves 8] [--nt 16] [--processes 2]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -44,6 +52,107 @@ from repro.launch.mesh import make_case_mesh  # noqa: E402
 from repro.surrogate.dataset import EnsembleConfig, random_band_limited_waves  # noqa: E402
 
 
+def _dist_child(args) -> None:
+    """One process of the ``--processes N`` scaling run (re-spawned self)."""
+    from repro.campaign.runner import case_topology
+    from repro.parallel import distributed as dist
+    from repro.launch.bootstrap import distributed_init
+
+    distributed_init(coordinator=args.coordinator, num_processes=args.processes,
+                     process_id=args.process_id)
+    mesh = meshgen.generate(*(int(x) for x in args.mesh_n.split("x")), pad_elems_to=8)
+    cfg = methods.SeismicConfig(dt=0.01, tol=1e-6, maxiter=400, npart=2, nspring=12)
+    waves = random_band_limited_waves(EnsembleConfig(n_waves=args.waves, nt=args.nt, dt=cfg.dt))
+    obs = mesh.surface[:1]
+    dmesh = make_case_mesh()  # spans every process
+    topo = case_topology(dmesh, args.kset)
+    B = args.kset * topo.n_dev
+
+    ops = methods.FemOperators(mesh, cfg)
+    chunk_fn, carry0 = make_campaign_chunk(ops, args.method, obs,
+                                           device_mesh=topo.exec_mesh)
+    carry0_b = broadcast_kset(carry0, topo.local)
+    padded, _ = pad_kset(waves, B)
+    wave_all = jnp.asarray(padded, cfg.rdtype)
+    n_rounds = padded.shape[0] // B
+
+    def ensemble_pass():
+        out = []
+        for r in range(n_rounds):
+            lo = r * B + topo.offset
+            _, (vel, _) = chunk_fn(carry0_b, wave_all[lo : lo + topo.local])
+            out.append(vel)
+        return jax.block_until_ready(out)
+
+    dist.barrier("bench_cold")
+    t0 = time.perf_counter()
+    ensemble_pass()  # includes the one compilation
+    dist.barrier("bench_cold_done")
+    cold_s = time.perf_counter() - t0
+    dist.barrier("bench_steady")
+    t0 = time.perf_counter()
+    ensemble_pass()
+    dist.barrier("bench_steady_done")  # slowest process bounds the ensemble
+    steady_s = time.perf_counter() - t0
+    if args.process_id == 0:
+        with open(args.dist_out, "w") as f:
+            json.dump({
+                "processes": args.processes,
+                "devices_per_process": len(jax.local_devices()),
+                "round_size": B, "rounds": n_rounds,
+                "total_s_cold": cold_s, "total_s": steady_s,
+                "cases_per_s": args.waves / steady_s,
+            }, f)
+
+
+def _run_distributed(args) -> dict:
+    """Spawn ``--processes N`` coordinated copies of this bench; returns the
+    scaling record process 0 measured (barrier-bracketed, so it reflects the
+    slowest process — the ensemble's true completion time)."""
+    from repro.parallel.distributed import free_port
+
+    port = free_port()
+    work = tempfile.mkdtemp()
+    out_path = os.path.join(work, "dist.json")
+    procs, logs = [], []
+    for pid in range(args.processes):
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+        cmd = [
+            sys.executable, os.path.abspath(__file__), "--dist-child",
+            "--coordinator", f"127.0.0.1:{port}",
+            "--processes", str(args.processes), "--process-id", str(pid),
+            "--dist-out", out_path, "--devices", "1",
+            "--waves", str(args.waves), "--nt", str(args.nt),
+            "--mesh-n", args.mesh_n, "--kset", str(args.kset),
+            "--method", args.method,
+        ]
+        # log files, not PIPEs: a chatty undrained sibling blocked on a full
+        # pipe buffer would stall the whole coordinated fleet at a barrier
+        log = open(os.path.join(work, f"p{pid}.log"), "w+")
+        logs.append(log)
+        procs.append(subprocess.Popen(cmd, env=env, stdout=log,
+                                      stderr=subprocess.STDOUT, text=True))
+    try:
+        for pid, p in enumerate(procs):
+            p.wait(timeout=1200)
+            if p.returncode != 0:
+                logs[pid].seek(0)
+                raise RuntimeError(
+                    f"distributed bench process {pid} failed:\n"
+                    f"{logs[pid].read()[-2000:]}"
+                )
+    finally:  # one dead process leaves siblings blocked at a barrier
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        for log in logs:
+            log.close()
+    with open(out_path) as f:
+        return json.load(f)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny sizes (CI)")
@@ -54,9 +163,17 @@ def main(argv=None):
     ap.add_argument("--mesh-n", default="2x2x2")
     ap.add_argument("--kset", type=int, default=2)
     ap.add_argument("--method", default="proposed2")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="also measure an N-process jax.distributed campaign")
+    ap.add_argument("--dist-child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--process-id", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--dist-out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
     if args.smoke:
         args.waves, args.nt = 4, 6
+    if args.dist_child:
+        return _dist_child(args)
 
     n_dev = min(args.devices, len(jax.devices()))
     mesh = meshgen.generate(*(int(x) for x in args.mesh_n.split("x")), pad_elems_to=8)
@@ -131,6 +248,8 @@ def main(argv=None):
         "speedup": base_s / camp_s,
         "max_rel_disagreement_vs_baseline": agree,
     }
+    if args.processes > 1:
+        payload["distributed_scaling"] = _run_distributed(args)
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -7,10 +7,18 @@ sharded across the device mesh (each device advancing a ``kset`` batch of
 cases while streaming its host-resident spring state through the
 StreamEngine), rounds are checkpointed for exact mid-campaign resume, and
 remainder case counts are padded + masked so any ``n_waves`` works.
+
+Multi-host: a case mesh spanning several ``jax.distributed`` processes
+(``launch.mesh.make_case_mesh`` under ``launch.bootstrap.distributed_init``)
+turns the same call into a node-parallel campaign — each process owns a
+contiguous slice of every round, checkpoints only its local shards, and
+process 0 commits the global manifest.  See ``docs/campaign_runbook.md``.
 """
 from repro.campaign.runner import (  # noqa: F401
     CampaignConfig,
     CampaignResult,
+    CaseTopology,
+    case_topology,
     make_campaign_chunk,
     run_campaign,
 )

@@ -1,11 +1,21 @@
 """Sharded ensemble campaigns with checkpoint/resume (the paper's §3 run).
 
 A campaign advances ``M`` independent earthquake cases through the chosen
-solution method in *rounds* of ``B = kset × n_devices`` cases:
+solution method in *rounds* of ``B = kset × n_devices`` cases, where
+``n_devices`` counts every device on the case mesh — across **all
+processes** of a multi-host launch:
 
 * the case axis is sharded over a 1-D device mesh (``launch.mesh.
   make_case_mesh``) with ``shard_map`` — cases are embarrassingly parallel,
   so the SPMD program has no collectives at all;
+* under ``jax.distributed`` (``launch.bootstrap.distributed_init``) the
+  mesh spans every process's devices and :func:`case_topology` assigns each
+  process an *owned contiguous slice* of the case axis (process-major, in
+  mesh-device order).  Because cases never communicate, each process then
+  executes the identical compiled program on its own slice over its local
+  devices — node-parallelism exactly as the paper runs its production
+  ensemble, with cross-process traffic limited to checkpoint coordination
+  barriers (``parallel.distributed``);
 * within each device, ``kset`` members run batched (vmap over the
   StreamEngine's ensemble axis — the generalized 2SET of Alg. 4) while the
   per-member spring state streams through the device in ``npart`` blocks
@@ -14,13 +24,27 @@ solution method in *rounds* of ``B = kset × n_devices`` cases:
   boundary the full campaign state — round index, time index, the batched
   Newmark carry with its partitioned spring state, and the accumulated
   observations — goes through :class:`~repro.training.checkpoint.
-  CheckpointManager`, so a killed campaign resumes *bit-identically*;
+  CheckpointManager`, so a killed campaign resumes *bit-identically*.
+  Multi-host runs checkpoint **only process-local shards** (keyed by
+  ``(process_index, step)``); process 0 commits the global manifest after a
+  barrier confirms every shard is durable, and completed rounds are banked
+  the same way (per-process ``rounds/round_NNNNN.pNN.npz`` shards made
+  visible by a process-0 ``.ok`` marker).  A killed N-process campaign
+  therefore resumes bit-identically on N processes — and *refuses* to
+  resume on any other world size;
 * ``M`` need not divide ``B``: the tail round is padded with repeats of the
   last case and the padded lanes are masked out of the result.
 
 The checkpoint cadence maps onto the paper's wall-time budgeting: its
 production run holds one 16,000-step case per GPU for hours, so the unit of
 loss on preemption must be a chunk of time steps, not a whole case.
+
+Multi-host results stay process-local: each process's
+:class:`CampaignResult` holds the cases it owns, with ``case_indices``
+mapping them back to rows of the global ``waves`` array (a single-process
+run returns ``case_indices == arange(M)``).  Gathering is the caller's
+choice — the CLI writes per-process dataset shards; nothing in the runner
+ever moves trajectory data between processes.
 """
 from __future__ import annotations
 
@@ -36,6 +60,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.stream import broadcast_kset, pad_kset
 from repro.fem import methods
+from repro.parallel import distributed as dist
 from repro.parallel.sharding import shard_map
 from repro.training.checkpoint import CheckpointManager
 
@@ -73,12 +98,85 @@ class CampaignConfig:
 
 
 class CampaignResult(NamedTuple):
-    velocity_history: np.ndarray  # [M_done, nt, n_obs, 3]
-    iters: np.ndarray             # [M_done, nt] solver iterations per step
+    velocity_history: np.ndarray  # [M_local, nt, n_obs, 3] owned cases only
+    iters: np.ndarray             # [M_local, nt] solver iterations per step
     rounds_done: int
     steps_done: int               # global time steps advanced (across rounds)
     completed: bool
     resumed_from: Optional[int]   # checkpoint step number, if resumed
+    case_indices: np.ndarray = np.zeros(0, np.int64)
+    """Global ``waves`` row of each returned case.  Single-process campaigns
+    own everything (``arange(M)``); each process of a multi-host campaign
+    gets only its owned slice, in global order."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseTopology:
+    """Which slice of every round this process owns, and how to execute it.
+
+    ``n_dev``      devices on the case axis, summed over all processes.
+    ``offset``     first case lane (within a round) owned by this process.
+    ``local``      cases per round owned here (``kset × local devices``).
+    ``exec_mesh``  process-local mesh the chunk program shard_maps over
+                   (``None`` → single local device, no shard_map).
+    """
+
+    n_dev: int
+    process_index: int
+    process_count: int
+    offset: int
+    local: int
+    exec_mesh: Any
+
+
+def case_topology(device_mesh, kset: int) -> CaseTopology:
+    """Derive per-process case ownership from a (possibly multi-host) mesh.
+
+    Cross-process XLA programs are unnecessary here (cases are independent)
+    and unavailable on the CPU test backend, so a mesh spanning several
+    processes is decomposed: each process owns the contiguous block of case
+    lanes that sit on its devices — mesh-device order, which
+    ``launch.mesh.make_case_mesh`` guarantees is process-major — and
+    executes them on a *local* sub-mesh.  Requires every participating
+    process to contribute the same number of devices, contiguously; a mesh
+    that interleaves processes (or skips one) raises rather than silently
+    assigning an empty or scattered slice.
+    """
+    if device_mesh is None:
+        return CaseTopology(1, 0, 1, 0, kset, None)
+    devs = list(device_mesh.devices.flat)
+    procs = sorted({d.process_index for d in devs})
+    if len(procs) == 1:
+        exec_mesh = device_mesh if len(devs) > 1 else None
+        return CaseTopology(len(devs), 0, 1, 0, kset * len(devs), exec_mesh)
+    me = jax.process_index()
+    if me not in procs:
+        raise ValueError(
+            f"case mesh spans processes {procs} but process {me} owns none "
+            f"of its devices — every process must participate"
+        )
+    counts = {p: sum(1 for d in devs if d.process_index == p) for p in procs}
+    if len(set(counts.values())) != 1:
+        raise ValueError(
+            f"case mesh is unbalanced across processes ({counts}); equal "
+            f"per-process device counts are required for uniform rounds"
+        )
+    mine = [i for i, d in enumerate(devs) if d.process_index == me]
+    if mine != list(range(mine[0], mine[0] + len(mine))):
+        raise ValueError(
+            "case mesh interleaves processes; build it with "
+            "launch.mesh.make_case_mesh (process-major device order)"
+        )
+    local_devs = [devs[i] for i in mine]
+    exec_mesh = (
+        jax.sharding.Mesh(np.asarray(local_devs), device_mesh.axis_names)
+        if len(mine) > 1
+        else None
+    )
+    return CaseTopology(
+        n_dev=len(devs), process_index=me, process_count=len(procs),
+        offset=kset * mine[0], local=kset * len(mine), exec_mesh=exec_mesh,
+    )
 
 
 def _chunk_bounds(nt: int, every: int) -> list[tuple[int, int]]:
@@ -113,21 +211,61 @@ def _campaign_sig(campaign: "CampaignConfig", cfg, waves: np.ndarray, B: int, ob
     )
 
 
-def _round_path(ckpt_dir: str, r: int) -> str:
-    return os.path.join(ckpt_dir, "rounds", f"round_{r:05d}.npz")
+def _round_path(ckpt_dir: str, r: int, topo: CaseTopology) -> str:
+    shard = f".p{topo.process_index:02d}" if topo.process_count > 1 else ""
+    return os.path.join(ckpt_dir, "rounds", f"round_{r:05d}{shard}.npz")
 
 
-def _bank_round(ckpt_dir: str, r: int, vel: np.ndarray, iters: np.ndarray) -> None:
+def _round_ok_path(ckpt_dir: str, r: int) -> str:
+    return os.path.join(ckpt_dir, "rounds", f"round_{r:05d}.ok")
+
+
+def _bank_round(
+    ckpt_dir: str, r: int, vel: np.ndarray, iters: np.ndarray, topo: CaseTopology
+) -> None:
     """Persist one completed round atomically — banked rounds are immutable,
     so they are written exactly once instead of being re-serialized into
     every subsequent checkpoint (which would make checkpoint volume grow
-    quadratically over a long campaign)."""
+    quadratically over a long campaign).
+
+    Multi-host: each process banks only its owned slice
+    (``round_NNNNN.pNN.npz``); after a barrier confirms every shard is on
+    disk, process 0 commits the round with an ``.ok`` marker — mirroring the
+    checkpoint manifest protocol, so a kill between shard writes leaves the
+    round uncommitted and it is simply recomputed on resume.
+    """
     os.makedirs(os.path.join(ckpt_dir, "rounds"), exist_ok=True)
-    path = _round_path(ckpt_dir, r)
+    path = _round_path(ckpt_dir, r, topo)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, vel=vel, iters=iters)
     os.replace(tmp, path)
+    if topo.process_count > 1:
+        dist.barrier("bank_round")
+        if topo.process_index == 0:
+            ok = _round_ok_path(ckpt_dir, r)
+            with open(ok + ".tmp", "w") as f:
+                f.write(f"{topo.process_count}\n")
+            os.replace(ok + ".tmp", ok)
+
+
+def _load_banked_round(
+    ckpt_dir: str, r: int, r0: int, topo: CaseTopology
+) -> tuple[np.ndarray, np.ndarray]:
+    path = _round_path(ckpt_dir, r, topo)
+    if topo.process_count > 1 and not os.path.exists(_round_ok_path(ckpt_dir, r)):
+        raise ValueError(
+            f"checkpoint says round {r0} but banked round {r} was never "
+            f"committed (missing {_round_ok_path(ckpt_dir, r)}) — checkpoint "
+            f"directory corrupt"
+        )
+    if not os.path.exists(path):
+        raise ValueError(
+            f"checkpoint says round {r0} but banked round file {path} is "
+            f"missing — checkpoint directory corrupt"
+        )
+    with np.load(path) as z:
+        return z["vel"], z["iters"]
 
 
 def make_campaign_chunk(
@@ -181,16 +319,34 @@ def run_campaign(
 
     ``device_mesh`` is a 1-D mesh whose ``campaign.case_axis`` shards the
     case dimension (``launch.mesh.make_case_mesh()``); None runs single-
-    device.  ``stop_after_steps`` aborts the campaign at the first chunk
-    boundary at or past that many global time steps *after* writing its
-    checkpoint — the fault-injection hook the kill-and-resume tests and the
-    CI smoke use (a real SIGKILL anywhere is no worse: the previous
+    device.  A mesh spanning several ``jax.distributed`` processes makes
+    this a multi-host campaign: every process calls ``run_campaign`` with
+    identical arguments, owns the case slice :func:`case_topology` assigns
+    it, and returns only its local cases (see ``CampaignResult.
+    case_indices``).  ``stop_after_steps`` aborts the campaign at the first
+    chunk boundary at or past that many global time steps *after* writing
+    its checkpoint — the fault-injection hook the kill-and-resume tests and
+    the CI smoke use (a real SIGKILL anywhere is no worse: the previous
     checkpoint is atomic on disk).
     """
     waves = np.asarray(waves)
     M, nt = waves.shape[0], waves.shape[1]
-    n_dev = int(device_mesh.devices.size) if device_mesh is not None else 1
-    B = campaign.kset * n_dev
+    topo = case_topology(device_mesh, campaign.kset)
+    if (
+        topo.process_count == 1
+        and campaign.checkpoint_dir
+        and dist.is_distributed()
+    ):
+        # N uncoordinated processes checkpointing single-process layouts
+        # into one (shared) directory would race each other's atomic
+        # renames and splice trajectories — refuse rather than corrupt
+        raise ValueError(
+            f"running under jax.distributed with {dist.process_count()} "
+            f"processes but the case mesh spans only this one; pass a "
+            f"spanning mesh (launch.mesh.make_case_mesh()) or give each "
+            f"process its own checkpoint_dir"
+        )
+    B = campaign.kset * topo.n_dev        # global round size
     padded, valid = pad_kset(waves, B)
     n_rounds = padded.shape[0] // B
     obs = np.asarray(observe if observe is not None else mesh.surface[:1])
@@ -198,17 +354,20 @@ def run_campaign(
 
     ops = methods.FemOperators(mesh, cfg)
     chunk_fn, carry0 = make_campaign_chunk(
-        ops, campaign.method, obs, device_mesh=device_mesh,
+        ops, campaign.method, obs, device_mesh=topo.exec_mesh,
         case_axis=campaign.case_axis,
     )
-    carry0_b = broadcast_kset(carry0, B)
+    carry0_b = broadcast_kset(carry0, topo.local)
     bounds = _chunk_bounds(nt, campaign.checkpoint_every)
     wave_all = jnp.asarray(padded, cfg.rdtype)
     vdt = np.dtype(cfg.rdtype)
     sig = _campaign_sig(campaign, cfg, waves, B, obs)
 
     mgr = (
-        CheckpointManager(campaign.checkpoint_dir, keep=campaign.keep)
+        CheckpointManager(
+            campaign.checkpoint_dir, keep=campaign.keep,
+            process_index=topo.process_index, process_count=topo.process_count,
+        )
         if campaign.checkpoint_dir
         else None
     )
@@ -246,14 +405,9 @@ def run_campaign(
             r0, t0 = int(head["meta"]["round"]), int(head["meta"]["t"])
             carry = st["carry"]
             for rr in range(r0):
-                path = _round_path(campaign.checkpoint_dir, rr)
-                if not os.path.exists(path):
-                    raise ValueError(
-                        f"checkpoint says round {r0} but banked round file "
-                        f"{path} is missing — checkpoint directory corrupt"
-                    )
-                with np.load(path) as z:
-                    done_rounds.append((z["vel"], z["iters"]))
+                done_rounds.append(
+                    _load_banked_round(campaign.checkpoint_dir, rr, r0, topo)
+                )
             if t0 > 0:
                 cur_vel = [np.asarray(st["vel"])]
                 cur_iters = [np.asarray(st["iters"])]
@@ -265,12 +419,17 @@ def run_campaign(
         state = {
             "carry": carry_next,
             "vel": (np.concatenate(cur_vel, axis=1) if cur_vel
-                    else np.zeros((B, 0, n_obs, 3), vdt)),
+                    else np.zeros((topo.local, 0, n_obs, 3), vdt)),
             "iters": (np.concatenate(cur_iters, axis=1) if cur_iters
-                      else np.zeros((B, 0), np.int64)),
+                      else np.zeros((topo.local, 0), np.int64)),
             "meta": {"sig": sig, "round": np.int64(r_next), "t": np.int64(t_next)},
         }
-        mgr.save(r_next * nt + t_next, state, blocking=blocking)
+        # the JSON meta is the cross-shard agreement key restore_latest
+        # validates: all processes must have banked the same (round, t)
+        mgr.save(
+            r_next * nt + t_next, state, blocking=blocking,
+            meta={"round": int(r_next), "t": int(t_next)},
+        )
 
     # ---- rounds ------------------------------------------------------------
     steps_done = r0 * nt + t0
@@ -279,7 +438,8 @@ def run_campaign(
     for r in range(r0, n_rounds):
         if r > r0:
             carry, cur_vel, cur_iters, t0 = carry0_b, [], [], 0
-        wave_r = wave_all[r * B : (r + 1) * B]
+        lo = r * B + topo.offset
+        wave_r = wave_all[lo : lo + topo.local]
         for a, b in bounds:
             if b <= t0:
                 continue  # already restored past this chunk
@@ -293,7 +453,9 @@ def run_campaign(
                 round_iters = np.concatenate(cur_iters, axis=1)
                 done_rounds.append((round_vel, round_iters))
                 if mgr is not None:
-                    _bank_round(campaign.checkpoint_dir, r, round_vel, round_iters)
+                    _bank_round(
+                        campaign.checkpoint_dir, r, round_vel, round_iters, topo
+                    )
                 cur_vel, cur_iters = [], []
                 completed = r + 1 == n_rounds
                 _save(r + 1, 0, carry0_b, blocking=completed)
@@ -312,22 +474,31 @@ def run_campaign(
         mgr.wait()
 
     nr_done = len(done_rounds)
-    vmask = valid[: nr_done * B]
+    # global waves row of each locally-held case, before masking out padding
+    ids = (
+        np.concatenate(
+            [r * B + topo.offset + np.arange(topo.local) for r in range(nr_done)]
+        )
+        if nr_done
+        else np.zeros(0, np.int64)
+    )
+    vmask = valid[ids]
     done_vel = (
         np.stack([v for v, _ in done_rounds])
         if nr_done
-        else np.zeros((0, B, nt, n_obs, 3), vdt)
+        else np.zeros((0, topo.local, nt, n_obs, 3), vdt)
     )
     done_iters = (
         np.stack([it for _, it in done_rounds])
         if nr_done
-        else np.zeros((0, B, nt), np.int64)
+        else np.zeros((0, topo.local, nt), np.int64)
     )
     return CampaignResult(
-        velocity_history=done_vel.reshape(nr_done * B, nt, n_obs, 3)[vmask],
-        iters=done_iters.reshape(nr_done * B, nt)[vmask],
+        velocity_history=done_vel.reshape(nr_done * topo.local, nt, n_obs, 3)[vmask],
+        iters=done_iters.reshape(nr_done * topo.local, nt)[vmask],
         rounds_done=nr_done,
         steps_done=steps_done,
         completed=completed,
         resumed_from=resumed_from,
+        case_indices=ids[vmask],
     )

@@ -1,28 +1,59 @@
 """Ensemble-campaign launcher (paper §3 production run).
 
+Single host::
+
     PYTHONPATH=src python -m repro.launch.campaign --waves 100 --nt 16000 \
         --kset 2 [--host-devices 2] [--ckpt-dir DIR --ckpt-every 500] \
         [--out shards/] [--method proposed2]
 
-Shards the ensemble-case axis over every visible device (``--host-devices``
-forces N virtual host devices for local rehearsal), streams each device's
-spring state through the StreamEngine, and checkpoints at ``--ckpt-every``
-time steps.  Kill it anywhere and relaunch with the same arguments: it
-resumes from the latest atomic checkpoint bit-identically.  Results land as
-dataset shards for the surrogate trainer (``--out``).
+Multi-host (run one copy per node; identical flags except ``--process-id``)::
 
-``--stop-after-steps`` is the fault-injection hook the CI kill-and-resume
-smoke uses: the campaign exits cleanly right after a mid-campaign
-checkpoint, exactly as a SIGKILL at that point would leave the directory.
+    PYTHONPATH=src python -m repro.launch.campaign ... \
+        --coordinator host0:1234 --num-processes 2 --process-id 0 \
+        [--cpu-backend]
+
+Flags
+-----
+``--waves / --nt / --mesh-n / --nspring / --seed``
+    Ensemble shape: how many band-limited bedrock waves, time steps per
+    case, basin mesh cells, springs per quadrature point, wave RNG seed.
+``--kset``
+    Cases advanced per device per round (the generalized 2SET residency).
+``--method``
+    One of ``repro.fem.methods.METHODS`` (default ``proposed2``).
+``--host-devices`` / ``--devices``
+    Force N virtual host devices (local rehearsal) / restrict the case
+    mesh to the first N devices (default: every visible device — global
+    across processes in a multi-host launch).
+``--ckpt-dir / --ckpt-every``
+    Checkpoint directory and cadence in time steps.  Kill the launcher
+    anywhere and relaunch with the same arguments: it resumes from the
+    latest atomic checkpoint bit-identically.  Multi-host runs write
+    per-process shards into the same (shared) directory and refuse to
+    resume on a different process count.
+``--out / --shard-size``
+    Write completed responses as ``.npz`` dataset shards for the surrogate
+    trainer.  Multi-host launches write each process's owned cases under
+    ``OUT/p<NN>/``.
+``--coordinator / --num-processes / --process-id``
+    ``jax.distributed`` topology: process 0's ``host:port`` coordination
+    address, world size, and this process's rank.
+``--cpu-backend``
+    Force ``JAX_PLATFORMS=cpu`` — the multi-process rehearsal/test mode.
+``--stop-after-steps``
+    Fault injection: the CI kill-and-resume smoke uses it to exit cleanly
+    right after a mid-campaign checkpoint, exactly as a SIGKILL at that
+    point would leave the directory.
 """
 import argparse
 import sys
 
-from repro.launch.bootstrap import force_host_devices
+from repro.launch.bootstrap import force_host_devices, parse_distributed
 
 force_host_devices()
+parse_distributed()  # pre-jax-import env effects (--cpu-backend)
 
-import jax  # noqa: E402  (after XLA_FLAGS)
+import jax  # noqa: E402  (after XLA_FLAGS / JAX_PLATFORMS)
 import numpy as np  # noqa: E402
 
 
@@ -45,11 +76,37 @@ def main(argv=None):
     ap.add_argument("--shard-size", type=int, default=16)
     ap.add_argument("--stop-after-steps", type=int, default=None,
                     help="fault injection: exit after this many global steps")
+    # multi-host topology (parsed pre-jax-import by parse_distributed; kept
+    # here so --help documents them and argparse accepts them)
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator, host:port (process 0)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--cpu-backend", action="store_true",
+                    help="force the CPU backend (multi-process rehearsal)")
     args = ap.parse_args(argv)
+
+    from repro.launch.bootstrap import DistributedArgs, distributed_init
+
+    # rebuilt from the parsed args (not module-level _DIST) so programmatic
+    # main([...]) calls honor the distributed flags they pass; on the normal
+    # CLI path both views come from the same sys.argv
+    distributed_init(DistributedArgs(
+        coordinator=args.coordinator, num_processes=args.num_processes,
+        process_id=args.process_id, cpu_backend=args.cpu_backend,
+    ))
+    pid, np_ = jax.process_index(), jax.process_count()
+    tag = f"[campaign p{pid}]" if np_ > 1 else "[campaign]"
 
     from repro.launch.mesh import make_case_mesh
     from repro.surrogate.dataset import EnsembleConfig, save_shards
 
+    if np_ > 1 and args.devices and args.devices != len(jax.devices()):
+        raise SystemExit(
+            f"{tag} --devices {args.devices} with {np_} processes: a "
+            f"multi-host campaign must use every device on the global case "
+            f"mesh ({len(jax.devices())}); drop --devices"
+        )
     n_dev = args.devices or len(jax.devices())
     dmesh = make_case_mesh(n_dev) if n_dev > 1 else None
     cfg = EnsembleConfig(
@@ -58,8 +115,9 @@ def main(argv=None):
         nspring=args.nspring, seed=args.seed, kset=args.kset,
     )
     B = args.kset * n_dev
-    print(f"[campaign] {args.waves} waves × {args.nt} steps, method={args.method}, "
-          f"{n_dev} device(s) × kset={args.kset} → rounds of {B}")
+    print(f"{tag} {args.waves} waves × {args.nt} steps, method={args.method}, "
+          f"{n_dev} device(s) × kset={args.kset} → rounds of {B}"
+          + (f" across {np_} processes" if np_ > 1 else ""))
 
     from repro.campaign import CampaignConfig, run_campaign
     from repro.fem import meshgen
@@ -78,18 +136,25 @@ def main(argv=None):
         stop_after_steps=args.stop_after_steps,
     )
     if res.resumed_from is not None:
-        print(f"[resume] from checkpoint step {res.resumed_from}")
+        print(f"{tag} [resume] from checkpoint step {res.resumed_from}")
     if not res.completed:
-        print(f"[stopped] after {res.steps_done} global steps "
+        print(f"{tag} [stopped] after {res.steps_done} global steps "
               f"({res.rounds_done} rounds banked) — relaunch to resume")
         return 0
     y = res.velocity_history[:, :, 0, :]
-    print(f"[done] {len(y)} responses, peak |v| = {np.abs(y).max():.3e} m/s, "
-          f"mean solver iters {res.iters.mean():.1f}")
+    # a process can own only padded lanes (waves ≤ its round offset) → empty
+    stats = (f", peak |v| = {np.abs(y).max():.3e} m/s, "
+             f"mean solver iters {res.iters.mean():.1f}" if len(y) else "")
+    print(f"{tag} [done] {len(y)} responses"
+          + (f" (cases {res.case_indices.min()}–{res.case_indices.max()} of "
+             f"{args.waves})" if np_ > 1 and len(y) else "") + stats)
     if args.out:
-        paths = save_shards(args.out, waves.astype(np.float32), y.astype(np.float32),
-                            shard_size=args.shard_size)
-        print(f"[shards] wrote {len(paths)} shard(s) to {args.out}")
+        out_dir = args.out if np_ == 1 else f"{args.out}/p{pid:02d}"
+        paths = save_shards(
+            out_dir, waves[res.case_indices].astype(np.float32),
+            y.astype(np.float32), shard_size=args.shard_size,
+        )
+        print(f"{tag} [shards] wrote {len(paths)} shard(s) to {out_dir}")
     return 0
 
 

@@ -38,14 +38,25 @@ def make_host_mesh(shape=(2, 4), axes=("data", "model")):
 
 
 def make_case_mesh(n_devices: int | None = None, axis: str = "case"):
-    """1-D mesh over the ensemble-case axis for campaign sharding.
+    """1-D global mesh over the ensemble-case axis for campaign sharding.
 
     Ensemble time-history cases are embarrassingly parallel (no halo, no
-    collective): one mesh axis over all (or the first ``n_devices``) local
+    collective): one mesh axis over all (or the first ``n_devices``)
     devices is the whole story.  Each device then streams its own members'
     host-resident spring state through the StreamEngine.
+
+    Under ``jax.distributed`` the default spans **every process's** devices
+    — the multi-host campaign mesh.  The mesh is built directly over
+    ``jax.devices()`` order (process-major: all of process 0's devices,
+    then process 1's, …) rather than through ``jax.make_mesh``, whose
+    topology-aware reordering could interleave processes; the campaign
+    runner derives each process's *owned contiguous slice* of the case
+    axis from exactly this order (``repro.campaign.runner.case_topology``).
     """
-    n = n_devices or len(jax.devices())
-    if n > len(jax.devices()):
-        raise ValueError(f"requested {n} devices, have {len(jax.devices())}")
-    return make_auto_mesh((n,), (axis,))
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    if n > len(devices):
+        raise ValueError(f"requested {n} devices, have {len(devices)}")
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))

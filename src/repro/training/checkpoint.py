@@ -1,23 +1,53 @@
-"""Fault-tolerant checkpointing: async, atomic, elastic.
+"""Fault-tolerant checkpointing: async, atomic, elastic, multi-host sharded.
 
-* **atomic**: writes go to ``step_<n>.tmp`` then a single ``os.replace``;
-  a crash mid-write can never corrupt the latest checkpoint.
+* **atomic**: writes go to ``…tmp`` then a single ``os.replace``; a crash
+  mid-write can never corrupt the latest checkpoint.
 * **async**: the device→host gather happens on the caller thread (cheap),
   serialization on a background thread; ``wait()`` joins before exit.
+  (Multi-process saves are synchronous — the commit barrier must run on the
+  caller thread, and the campaign only checkpoints at chunk boundaries.)
 * **elastic**: checkpoints store *logically unsharded* arrays; ``restore``
   lays them out onto any mesh/sharding — restarting 2-pod training on one
   pod (or 4) is a restore call with different shardings.
+* **multi-host sharded**: with ``process_count > 1`` each process writes
+  only its own shard — ``step_<n>.p<k>/`` keyed by ``(process_index,
+  step)`` — and process 0 commits a global manifest
+  (``step_<n>.commit.json``) *after* a cross-process barrier confirms every
+  shard is on disk.  A checkpoint exists iff its commit manifest exists, so
+  a kill anywhere leaves either the previous committed step or a complete
+  new one; orphan shards are invisible and garbage-collected.
+  ``restore_latest`` refuses a world-size mismatch (an N-process checkpoint
+  restored by M ≠ N processes) and validates that all shards agree on the
+  caller's ``meta`` (the campaign's ``(round, t)``) before touching any
+  array data.
+
+On-disk layout::
+
+    dir/step_000000042/            single-process (legacy) checkpoint
+        manifest.json              {"step", "leaves", "meta"}
+        <name>/00000.npy …
+    dir/step_000000042.p00/        process 0's shard of a sharded checkpoint
+        manifest.json              {"step", "process_index", "process_count",
+                                    "meta", "leaves"}
+        <name>/00000.npy …
+    dir/step_000000042.commit.json the global manifest: the step is durable
+                                   iff this file exists
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+_STEP_DIR = re.compile(r"^step_(\d+)$")
+_SHARD_DIR = re.compile(r"^step_(\d+)\.p(\d+)$")
+_COMMIT = re.compile(r"^step_(\d+)\.commit\.json$")
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -26,47 +56,141 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        *,
+        process_index: int = 0,
+        process_count: int = 1,
+        barrier: Optional[Callable[[], None]] = None,
+    ):
+        """``barrier`` syncs all processes (zero-arg callable); defaults to
+        the coordination-service barrier when ``process_count > 1``.  Unit
+        tests inject a no-op to emulate N processes from one."""
+        if not 0 <= process_index < process_count:
+            raise ValueError(f"process_index {process_index} outside [0, {process_count})")
         self.directory = directory
         self.keep = keep
+        self.process_index = process_index
+        self.process_count = process_count
+        if barrier is None and process_count > 1:
+            from repro.parallel.distributed import make_barrier
+
+            barrier = make_barrier("ckpt")
+        self._barrier = barrier or (lambda: None)
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
+    @property
+    def sharded(self) -> bool:
+        return self.process_count > 1
+
     # ---- save -------------------------------------------------------------
-    def save(self, step: int, state: dict[str, Any], blocking: bool = False) -> None:
-        """``state`` is a dict of named pytrees (e.g. params, opt_state)."""
+    def save(
+        self,
+        step: int,
+        state: dict[str, Any],
+        blocking: bool = False,
+        meta: Optional[dict[str, Any]] = None,
+    ) -> None:
+        """``state`` is a dict of named pytrees (e.g. params, opt_state).
+
+        ``meta`` is a small JSON-serializable dict recorded in the (shard)
+        manifest; on sharded restore it is the agreement key all shards must
+        match on (the campaign passes ``{"round": r, "t": t}``).
+        """
         arrays = {name: _flatten(tree) for name, tree in state.items()}
         self.wait()  # one in-flight save at a time
-        self._thread = threading.Thread(target=self._write, args=(step, arrays), daemon=True)
+        if self.sharded:
+            # synchronous: the shard barrier + process-0 commit must happen
+            # on the caller thread, in program order with the caller's own
+            # cross-process coordination
+            self._write(step, arrays, meta)
+            return
+        self._thread = threading.Thread(
+            target=self._write, args=(step, arrays, meta), daemon=True
+        )
         self._thread.start()
         if blocking:
             self.wait()
 
-    def _write(self, step: int, arrays: dict[str, dict[str, np.ndarray]]) -> None:
-        final = os.path.join(self.directory, f"step_{step:09d}")
+    def _shard_path(self, step: int, proc: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}.p{proc:02d}")
+
+    def _commit_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}.commit.json")
+
+    def _write(
+        self,
+        step: int,
+        arrays: dict[str, dict[str, np.ndarray]],
+        meta: Optional[dict[str, Any]] = None,
+    ) -> None:
+        if self.sharded:
+            final = self._shard_path(step, self.process_index)
+        else:
+            final = os.path.join(self.directory, f"step_{step:09d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {}
+        manifest: dict[str, Any] = {"step": step, "meta": meta, "leaves": {}}
+        if self.sharded:
+            manifest["process_index"] = self.process_index
+            manifest["process_count"] = self.process_count
         for name, leaves in arrays.items():
             sub = os.path.join(tmp, name)
             os.makedirs(sub)
-            manifest[name] = []
+            manifest["leaves"][name] = []
             for i, (key, arr) in enumerate(sorted(leaves.items())):
                 np.save(os.path.join(sub, f"{i:05d}.npy"), arr)
-                manifest[name].append(key)
+                manifest["leaves"][name].append(key)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "leaves": manifest}, f)
+            json.dump(manifest, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        if self.sharded:
+            # every shard durable before the manifest makes the step visible
+            self._barrier()
+            if self.process_index == 0:
+                ctmp = self._commit_path(step) + ".tmp"
+                with open(ctmp, "w") as f:
+                    json.dump({"step": step, "process_count": self.process_count}, f)
+                os.replace(ctmp, self._commit_path(step))
+            # nobody GCs (or returns to overwrite state) until the commit is
+            # visible to all
+            self._barrier()
         self._gc()
 
     def _gc(self) -> None:
-        steps = sorted(self.all_steps())
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"), ignore_errors=True)
+        keep = set(sorted(self.all_steps())[-self.keep :])
+        entries = os.listdir(self.directory)
+        if self.process_index == 0:
+            # commits first: a half-deleted step must never look committed
+            for d in entries:
+                m = _COMMIT.match(d)
+                if m and int(m.group(1)) not in keep:
+                    try:
+                        os.remove(os.path.join(self.directory, d))
+                    except FileNotFoundError:
+                        pass
+            for d in entries:
+                m = _STEP_DIR.match(d)
+                if m and int(m.group(1)) not in keep:
+                    shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+        newest = max(keep, default=-1)
+        for d in entries:
+            m = _SHARD_DIR.match(d)
+            if not m or int(m.group(2)) != self.process_index:
+                continue  # own shards only
+            s = int(m.group(1))
+            # a shard newer than the newest committed step is mid-protocol
+            # (written, commit pending) — never its own GC's victim; a kill's
+            # orphan at that step is collected once a newer step commits
+            if s not in keep and s <= newest:
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -74,29 +198,97 @@ class CheckpointManager:
             self._thread = None
 
     # ---- restore ----------------------------------------------------------
-    def all_steps(self) -> list[int]:
-        out = []
+    def _committed_steps(self) -> set[int]:
+        out = set()
         for d in os.listdir(self.directory):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                out.append(int(d.split("_")[1]))
-        return sorted(out)
+            m = _COMMIT.match(d)
+            if m:
+                out.add(int(m.group(1)))
+        return out
+
+    def _legacy_steps(self) -> set[int]:
+        out = set()
+        for d in os.listdir(self.directory):
+            m = _STEP_DIR.match(d)
+            if m:
+                out.add(int(m.group(1)))
+        return out
+
+    def all_steps(self) -> list[int]:
+        """Steps restorable from this directory (legacy dirs + committed
+        sharded steps; orphan shards and ``.tmp`` debris are invisible)."""
+        return sorted(self._legacy_steps() | self._committed_steps())
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def _read_manifest(self, path: str) -> Optional[dict]:
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                return json.load(f)
+        except (FileNotFoundError, NotADirectoryError, json.JSONDecodeError):
+            return None
+
+    def _validate_sharded(self, step: int) -> None:
+        """World size + shard agreement for a committed sharded step."""
+        with open(self._commit_path(step)) as f:
+            commit = json.load(f)
+        pc = int(commit["process_count"])
+        if pc != self.process_count:
+            raise ValueError(
+                f"checkpoint step {step} in {self.directory} was written by "
+                f"{pc} process(es) but this run has {self.process_count} — "
+                f"refusing to resume on a mismatched world size"
+            )
+        metas = []
+        for k in range(pc):
+            man = self._read_manifest(self._shard_path(step, k))
+            if man is None:
+                raise ValueError(
+                    f"checkpoint step {step} is committed but shard p{k:02d} "
+                    f"is missing/unreadable — checkpoint directory corrupt"
+                )
+            metas.append(man.get("meta"))
+        if any(m != metas[0] for m in metas[1:]):
+            raise ValueError(
+                f"checkpoint step {step} shards disagree on meta "
+                f"({metas}) — refusing to splice inconsistent shards"
+            )
 
     def restore_latest(
         self,
         like: dict[str, Any],
         shardings: Optional[dict[str, Any]] = None,
     ) -> Optional[tuple[int, dict[str, Any]]]:
-        """``(step, state)`` from the newest checkpoint, or ``None`` if the
-        directory holds none — the resume-or-start-fresh idiom shared by the
-        training launcher and the campaign runner."""
-        step = self.latest_step()
-        if step is None:
-            return None
-        return step, self.restore(step, like, shardings=shardings)
+        """``(step, state)`` from the newest *valid* checkpoint, or ``None``
+        if the directory holds none — the resume-or-start-fresh idiom shared
+        by the training launcher and the campaign runner.
+
+        A torn single-process step (directory without a readable manifest —
+        e.g. pre-atomic debris) is skipped in favor of the next older step.
+        A world-size mismatch, a committed step with a missing shard, or
+        shards disagreeing on ``meta`` raise: those are operator errors a
+        silent fresh start (or older restore) would hide.
+        """
+        committed = self._committed_steps()
+        legacy = self._legacy_steps()
+        if self.sharded and legacy and not committed:
+            raise ValueError(
+                f"{self.directory} holds single-process checkpoints but this "
+                f"run has {self.process_count} processes — refusing to resume "
+                f"on a mismatched world size"
+            )
+        for step in sorted(committed | legacy, reverse=True):
+            if step in committed:
+                self._validate_sharded(step)
+                return step, self.restore(step, like, shardings=shardings)
+            if self.sharded:
+                continue  # orphan legacy dir below a committed step
+            if self._read_manifest(os.path.join(self.directory, f"step_{step:09d}")) is None:
+                continue  # torn step: fall back to the previous one
+            return step, self.restore(step, like, shardings=shardings)
+        return None
 
     def restore(
         self,
@@ -106,8 +298,17 @@ class CheckpointManager:
     ) -> dict[str, Any]:
         """Rebuild named pytrees with ``like``'s structure; place with
         ``shardings`` (pytree of shardings per name) if given — this is the
-        elastic-resharding path."""
-        path = os.path.join(self.directory, f"step_{step:09d}")
+        elastic-resharding path.  Sharded managers read only their own
+        process's shard."""
+        if self.sharded or step in self._committed_steps():
+            if not self.sharded:
+                raise ValueError(
+                    f"step {step} is a sharded checkpoint; restore it with a "
+                    f"CheckpointManager(process_count=N) matching its writers"
+                )
+            path = self._shard_path(step, self.process_index)
+        else:
+            path = os.path.join(self.directory, f"step_{step:09d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         out = {}

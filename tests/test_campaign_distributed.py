@@ -1,0 +1,221 @@
+"""Multi-host distributed campaigns: 2 ``jax.distributed`` CPU processes,
+each owning half the case axis, checkpointing per-process shards with a
+process-0-committed manifest.  Covers end-to-end run, kill-and-resume
+bit-identity, and world-size-mismatch refusal (the PR's acceptance
+invariant).  Subprocess isolation throughout: device count and the
+distributed runtime must be configured before jax initializes."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.campaign.runner import CaseTopology, case_topology
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# case ownership (pure logic, no subprocesses)
+# ---------------------------------------------------------------------------
+
+
+class _Dev:
+    def __init__(self, process_index):
+        self.process_index = process_index
+
+
+class _Mesh:
+    axis_names = ("case",)
+
+    def __init__(self, procs):
+        self.devices = np.array([_Dev(p) for p in procs], dtype=object)
+
+
+def test_case_topology_single_process():
+    assert case_topology(None, kset=3) == CaseTopology(1, 0, 1, 0, 3, None)
+    m = _Mesh([0, 0])
+    t = case_topology(m, kset=2)
+    assert (t.n_dev, t.offset, t.local, t.process_count) == (2, 0, 4, 1)
+    assert t.exec_mesh is m  # single-process mesh used as-is
+
+
+def test_case_topology_multi_process_ownership():
+    t = case_topology(_Mesh([0, 1]), kset=2)  # this process is rank 0
+    assert (t.n_dev, t.process_count, t.offset, t.local) == (2, 2, 0, 2)
+    assert t.exec_mesh is None  # one local device → no shard_map
+
+
+def test_case_topology_rejects_bad_meshes():
+    with pytest.raises(ValueError, match="owns none"):
+        case_topology(_Mesh([1, 2]), kset=1)
+    with pytest.raises(ValueError, match="unbalanced"):
+        case_topology(_Mesh([0, 0, 1]), kset=1)
+    with pytest.raises(ValueError, match="interleaves"):
+        case_topology(_Mesh([0, 1, 0, 1]), kset=1)
+
+
+# ---------------------------------------------------------------------------
+# 2-process end-to-end (subprocess pairs sharing a coordination service)
+# ---------------------------------------------------------------------------
+
+
+_PRELUDE = """
+    import os
+    pid = int(os.environ["DIST_PID"])
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.launch.bootstrap import distributed_init
+    distributed_init(coordinator="127.0.0.1:" + os.environ["DIST_PORT"],
+                     num_processes=2, process_id=pid)
+    assert jax.process_count() == 2 and len(jax.devices()) == 2
+
+    import numpy as np
+    from repro.campaign import CampaignConfig, run_campaign
+    from repro.fem import meshgen, methods
+    from repro.launch.mesh import make_case_mesh
+
+    work = os.environ["DIST_WORK"]
+    mesh = meshgen.generate(2, 2, 2, pad_elems_to=4)
+    cfg = methods.SeismicConfig(dt=0.01, tol=1e-8, maxiter=600, npart=2, nspring=12)
+    rng = np.random.default_rng(3)
+    waves = np.zeros((5, 6, 3)); waves[:, :, 0] = 0.3 * rng.normal(size=(5, 6))
+    dmesh = make_case_mesh()  # spans both processes
+    cc = lambda **kw: CampaignConfig(kset=2, method="proposed2",
+                                     checkpoint_every=3, **kw)
+"""
+
+
+def _spawn_pair(body: str, work: str, timeout=600) -> list[str]:
+    """Run the prelude + ``body`` in 2 coordinated jax.distributed CPU
+    processes (1 forced host device each); returns both stdouts.  Children
+    write to log files, not PIPEs — an undrained sibling blocked on a full
+    pipe buffer would stall the fleet at a coordination barrier."""
+    from repro.parallel.distributed import free_port
+
+    port = free_port()
+    code = textwrap.dedent(_PRELUDE) + textwrap.dedent(body)
+    procs, logs = [], []
+    for pid in range(2):
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=1",
+            "PYTHONPATH": os.path.join(REPO, "src"),
+            "DIST_PID": str(pid), "DIST_PORT": str(port), "DIST_WORK": work,
+        })
+        log = open(os.path.join(work, f"spawn_p{pid}.log"), "w+")
+        logs.append(log)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", code],
+            stdout=log, stderr=subprocess.STDOUT, text=True, env=env,
+        ))
+    outs = []
+    try:
+        for pid, p in enumerate(procs):
+            p.wait(timeout=timeout)
+            logs[pid].seek(0)
+            out = logs[pid].read()
+            assert p.returncode == 0, f"process {pid} failed:\n{out[-3000:]}"
+            outs.append(out)
+    finally:
+        for q in procs:
+            if q.poll() is None:
+                q.kill()
+        for log in logs:
+            log.close()
+    return outs
+
+
+def test_two_process_campaign_end_to_end_kill_resume_and_mismatch(tmp_path):
+    """The acceptance invariant, in three acts sharing one checkpoint dir:
+
+    1. reference unkilled 2-process run (each process keeps its owned
+       cases) + a second run stopped mid-round after a checkpoint;
+    2. a fresh 2-process pair resumes from the per-process shards and must
+       reproduce the unkilled velocity history bit-for-bit — and agree
+       with a single-device run of the same ensemble;
+    3. a 1-process resume against the 2-process checkpoint must refuse.
+    """
+    work = str(tmp_path)
+
+    # --- act 1: reference + fault-injected partial run ---------------------
+    outs = _spawn_pair("""
+        ref = run_campaign(mesh, cfg, waves, campaign=cc(), device_mesh=dmesh)
+        assert ref.completed and ref.rounds_done == 2
+        # 5 waves, rounds of 4: rank 0 owns {0,1,4}+pad-masked, rank 1 {2,3}
+        np.savez(os.path.join(work, f"ref_p{pid}.npz"),
+                 vel=ref.velocity_history, iters=ref.iters, ids=ref.case_indices)
+        part = run_campaign(mesh, cfg, waves,
+                            campaign=cc(checkpoint_dir=os.path.join(work, "ckpt")),
+                            device_mesh=dmesh, stop_after_steps=7)
+        assert not part.completed and part.steps_done < 12
+        print("ACT1_OK", pid, part.steps_done)
+    """, work)
+    assert all("ACT1_OK" in o for o in outs)
+    # per-process shards + process-0 manifest commit actually on disk
+    names = os.listdir(os.path.join(work, "ckpt"))
+    assert any(n.endswith(".p00") for n in names), names
+    assert any(n.endswith(".p01") for n in names), names
+    assert any(n.endswith(".commit.json") for n in names), names
+    assert os.path.exists(os.path.join(work, "ckpt", "rounds", "round_00000.ok"))
+
+    # --- act 2: resume bit-identically on the same world size --------------
+    outs = _spawn_pair("""
+        res = run_campaign(mesh, cfg, waves,
+                           campaign=cc(checkpoint_dir=os.path.join(work, "ckpt")),
+                           device_mesh=dmesh)
+        assert res.completed and res.resumed_from is not None
+        ref = np.load(os.path.join(work, f"ref_p{pid}.npz"))
+        assert np.array_equal(res.case_indices, ref["ids"])
+        assert np.array_equal(res.velocity_history, ref["vel"])
+        assert np.array_equal(res.iters, ref["iters"])
+        if pid == 0:  # owned slices agree with a plain single-device run
+            single = run_campaign(mesh, cfg, waves, campaign=cc())
+            scale = np.abs(single.velocity_history).max() + 1e-30
+            err = np.abs(res.velocity_history
+                         - single.velocity_history[res.case_indices]).max()
+            assert err < 1e-9 * scale, err
+        print("ACT2_OK", pid, res.resumed_from)
+    """, work)
+    assert all("ACT2_OK" in o for o in outs)
+
+    # --- act 3: shard-count mismatch refusal -------------------------------
+    env = dict(os.environ)
+    env.update({"JAX_PLATFORMS": "cpu", "PYTHONPATH": os.path.join(REPO, "src"),
+                "DIST_WORK": work,
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=1"})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import os
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.campaign import CampaignConfig, run_campaign
+        from repro.fem import meshgen, methods
+        from repro.training.checkpoint import CheckpointManager
+
+        work = os.environ["DIST_WORK"]
+        try:
+            CheckpointManager(os.path.join(work, "ckpt")).restore_latest(
+                {"meta": {"round": np.zeros((), np.int64)}})
+            raise SystemExit("manager accepted a 2-process checkpoint")
+        except ValueError as e:
+            assert "world size" in str(e), e
+        mesh = meshgen.generate(2, 2, 2, pad_elems_to=4)
+        cfg = methods.SeismicConfig(dt=0.01, tol=1e-8, maxiter=600, npart=2, nspring=12)
+        rng = np.random.default_rng(3)
+        waves = np.zeros((5, 6, 3)); waves[:, :, 0] = 0.3 * rng.normal(size=(5, 6))
+        try:
+            run_campaign(mesh, cfg, waves,
+                         campaign=CampaignConfig(kset=2, method="proposed2",
+                                                 checkpoint_every=3,
+                                                 checkpoint_dir=os.path.join(work, "ckpt")))
+            raise SystemExit("campaign accepted a 2-process checkpoint")
+        except ValueError as e:
+            assert "world size" in str(e), e
+        print("ACT3_OK")
+    """)], capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ACT3_OK" in out.stdout

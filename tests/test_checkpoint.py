@@ -1,0 +1,166 @@
+"""CheckpointManager edge cases: empty/torn directories, sharded
+(multi-process) checkpoints, world-size refusal, cross-shard meta
+agreement.  Sharded behavior is exercised from a single process by
+injecting a no-op barrier and interleaving two managers by hand."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import CheckpointManager
+
+NOOP = lambda: None  # noqa: E731
+
+
+def _state(v):
+    return {"params": {"w": np.full((3,), float(v))}}
+
+
+def _like():
+    return {"params": {"w": np.zeros((3,))}}
+
+
+# ---------------------------------------------------------------------------
+# single-process edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_restore_latest_empty_directory(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    assert mgr.restore_latest(_like()) is None
+    assert mgr.latest_step() is None and mgr.all_steps() == []
+
+
+def test_restore_latest_skips_torn_final_checkpoint(tmp_path):
+    """A step directory without a readable manifest (torn debris) must fall
+    back to the previous good step, not crash or win."""
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d)
+    mgr.save(1, _state(1.0), blocking=True)
+    mgr.save(2, _state(2.0), blocking=True)
+    # torn step 3: directory exists, manifest never landed
+    os.makedirs(os.path.join(d, "step_000000003"))
+    # and in-flight .tmp debris from a kill mid-write
+    os.makedirs(os.path.join(d, "step_000000004.tmp"))
+    step, st = mgr.restore_latest(_like())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(st["params"]["w"]), 2.0)
+    # corrupt (unparseable) manifest is torn too
+    mgr.save(5, _state(5.0), blocking=True)
+    with open(os.path.join(d, "step_000000005", "manifest.json"), "w") as f:
+        f.write("{not json")
+    step, _ = mgr.restore_latest(_like())
+    assert step == 2
+
+
+def test_gc_keeps_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# sharded (multi-process) checkpoints, emulated in-process
+# ---------------------------------------------------------------------------
+
+
+def _pair(d, **kw):
+    return [
+        CheckpointManager(d, process_index=k, process_count=2, barrier=NOOP, **kw)
+        for k in range(2)
+    ]
+
+
+def _save_pair(mgrs, step, vals, meta):
+    # p1 first: with a no-op barrier, p0's save commits the manifest, so it
+    # must come last — exactly the ordering the real barrier enforces
+    for mgr, v in list(zip(mgrs, vals))[::-1]:
+        mgr.save(step, _state(v), meta=meta)
+
+
+def test_sharded_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgrs = _pair(d)
+    _save_pair(mgrs, 7, (10.0, 20.0), {"round": 1, "t": 3})
+    for k, mgr in enumerate(mgrs):
+        step, st = mgr.restore_latest(_like())
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(st["params"]["w"]), (k + 1) * 10.0)
+    assert os.path.exists(os.path.join(d, "step_000000007.commit.json"))
+
+
+def test_sharded_uncommitted_step_is_invisible(tmp_path):
+    """Shards written but manifest never committed (killed before the
+    process-0 commit) → the step does not exist; the previous one wins."""
+    d = str(tmp_path / "ckpt")
+    mgrs = _pair(d)
+    _save_pair(mgrs, 1, (1.0, 2.0), {"round": 0, "t": 1})
+    mgrs[1].save(2, _state(9.0), meta={"round": 0, "t": 2})  # p1 only, no commit
+    for mgr in mgrs:
+        step, _ = mgr.restore_latest(_like())
+        assert step == 1
+
+
+def test_sharded_round_meta_mismatch_refused(tmp_path):
+    """Shards that disagree on (round, t) — e.g. two campaigns interleaved
+    into one directory — must be refused, not spliced."""
+    d = str(tmp_path / "ckpt")
+    mgrs = _pair(d)
+    _save_pair(mgrs, 3, (1.0, 2.0), {"round": 1, "t": 0})
+    shard = os.path.join(d, "step_000000003.p01", "manifest.json")
+    with open(shard) as f:
+        man = json.load(f)
+    man["meta"] = {"round": 2, "t": 5}
+    with open(shard, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="disagree"):
+        mgrs[0].restore_latest(_like())
+
+
+def test_sharded_missing_shard_refused(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgrs = _pair(d)
+    _save_pair(mgrs, 3, (1.0, 2.0), {"round": 1, "t": 0})
+    import shutil
+
+    shutil.rmtree(os.path.join(d, "step_000000003.p01"))
+    with pytest.raises(ValueError, match="missing"):
+        mgrs[0].restore_latest(_like())
+
+
+def test_world_size_mismatch_refused_both_directions(tmp_path):
+    # 2-process checkpoint, 1-process resume
+    d2 = str(tmp_path / "two")
+    _save_pair(_pair(d2), 5, (1.0, 2.0), {"round": 0, "t": 5})
+    solo = CheckpointManager(d2)
+    with pytest.raises(ValueError, match="world size"):
+        solo.restore_latest(_like())
+    # 1-process checkpoint, 2-process resume
+    d1 = str(tmp_path / "one")
+    CheckpointManager(d1).save(5, _state(1.0), blocking=True)
+    mgr = CheckpointManager(d1, process_index=0, process_count=2, barrier=NOOP)
+    with pytest.raises(ValueError, match="world size"):
+        mgr.restore_latest(_like())
+
+
+def test_sharded_gc_cleans_shards_commits_and_orphans(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgrs = _pair(d, keep=1)
+    _save_pair(mgrs, 1, (1.0, 2.0), {"round": 0, "t": 1})
+    mgrs[1].save(2, _state(9.9), meta={"round": 0, "t": 2})  # orphan shard
+    _save_pair(mgrs, 3, (3.0, 4.0), {"round": 0, "t": 3})
+    for mgr in mgrs:  # both processes GC their own shards
+        mgr._gc()
+    left = sorted(os.listdir(d))
+    assert left == [
+        "step_000000003.commit.json", "step_000000003.p00", "step_000000003.p01",
+    ]
+
+
+def test_meta_recorded_in_single_process_manifest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    CheckpointManager(d).save(1, _state(1.0), blocking=True, meta={"round": 4, "t": 2})
+    with open(os.path.join(d, "step_000000001", "manifest.json")) as f:
+        assert json.load(f)["meta"] == {"round": 4, "t": 2}

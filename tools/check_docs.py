@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Keep README/docs code snippets runnable.
+
+Extracts fenced code blocks from the repo's markdown and checks them:
+
+* every ```python block must at least *compile* (syntax drift is the most
+  common way docs rot);
+* blocks whose first line is the marker comment ``# docs-ci: run`` are
+  additionally **executed** (bash via ``bash -euo pipefail``, python via the
+  current interpreter) from the repo root with ``PYTHONPATH=src`` — the CI
+  docs job runs these, so the tier-1 verify command and the quickstart in
+  README.md are exercised exactly as a reader would type them.
+
+Usage:
+    python tools/check_docs.py [--syntax-only] [FILES...]
+
+Default file set: README.md, DESIGN.md, docs/*.md.  ``--syntax-only`` skips
+execution (the cheap mode the tier-1 test suite runs on every push).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUN_MARKER = "# docs-ci: run"
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_blocks(path: str) -> list[tuple[str, int, str]]:
+    """``(language, first_line_number, source)`` for each fenced block."""
+    blocks = []
+    lang, start, buf = None, 0, []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE.match(line)
+            if m and lang is None:
+                lang, start, buf = m.group(1) or "", i + 1, []
+            elif line.rstrip() == "```" and lang is not None:
+                blocks.append((lang, start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+def check_file(path: str, run: bool) -> list[str]:
+    errors = []
+    rel = os.path.relpath(path, REPO)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for lang, line, src in extract_blocks(path):
+        where = f"{rel}:{line}"
+        if lang == "python":
+            try:
+                compile(src, where, "exec")
+            except SyntaxError as e:
+                errors.append(f"{where}: python block does not compile: {e}")
+                continue
+        if not (run and src.lstrip().startswith(RUN_MARKER)):
+            continue
+        if lang == "bash":
+            cmd = ["bash", "-euo", "pipefail", "-c", src]
+        elif lang == "python":
+            cmd = [sys.executable, "-c", src]
+        else:
+            errors.append(f"{where}: '{RUN_MARKER}' on unsupported language {lang!r}")
+            continue
+        print(f"[check_docs] running {where} ({lang})", flush=True)
+        res = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True, text=True)
+        if res.returncode != 0:
+            errors.append(
+                f"{where}: marked block failed (exit {res.returncode}):\n"
+                f"{res.stdout[-2000:]}\n{res.stderr[-2000:]}"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="markdown files (default: README, DESIGN, docs/)")
+    ap.add_argument("--syntax-only", action="store_true",
+                    help="compile python blocks but execute nothing")
+    args = ap.parse_args(argv)
+    files = args.files or (
+        [os.path.join(REPO, "README.md"), os.path.join(REPO, "DESIGN.md")]
+        + sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    )
+    errors = []
+    n_blocks = 0
+    for path in files:
+        if not os.path.exists(path):
+            errors.append(f"{os.path.relpath(path, REPO)}: missing")
+            continue
+        n_blocks += len(extract_blocks(path))
+        errors.extend(check_file(path, run=not args.syntax_only))
+    for e in errors:
+        print(f"[check_docs] FAIL {e}", file=sys.stderr)
+    print(f"[check_docs] {len(files)} file(s), {n_blocks} fenced block(s), "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
