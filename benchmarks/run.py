@@ -43,6 +43,12 @@ def main() -> None:
     info = nn_surrogate.main(n_waves=8, nt=64, steps=300)
     print(f"nn_surrogate,{info['train_s']*1e6:.0f},val_mae={info['val_mae']:.4f}")
 
+    print("\n== Scenario sweep: compile groups + autotuner ==")
+    from benchmarks import scenario_bench
+
+    scenario_bench.main(["--smoke", "--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_scenario.json")])
+
     print("\n== Roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline
 

@@ -1,0 +1,112 @@
+"""Scenario-sweep benchmark: compile-grouped campaigns + autotuner choices.
+
+Runs a catalog sweep (2 wave families × 2 soil profiles by default) through
+the scenario planner and emits ``BENCH_scenario.json``:
+
+* **compile amortization** — the sweep's scenarios collapse into compile
+  groups (same mesh + physics ⇒ one compiled campaign program); the payload
+  reports scenarios vs groups, and per-group cold wall time (which contains
+  that group's single compile);
+* **cases/s per plan group** with the autotuner's chosen ``(method, npart,
+  kset)`` — the throughput number a capacity plan for a bigger sweep
+  extrapolates from;
+* the full plan manifest (scenario names, signatures, case ranges), so the
+  benchmark doubles as a worked example of the plan format.
+
+Usage:
+    PYTHONPATH=src python benchmarks/scenario_bench.py [--smoke] [--probe] \
+        [--out PATH] [--cases 4] [--nt 12] [--mesh-n 2x2x2] [--no-autotune]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.bootstrap import force_host_devices  # noqa: E402
+
+force_host_devices(flag="--devices", default=1)
+
+import jax  # noqa: E402
+
+from repro import scenario as sc  # noqa: E402
+
+
+def make_sweep(cases: int, nt: int, mesh_n: tuple) -> sc.SweepSpec:
+    return sc.SweepSpec(
+        base=sc.Scenario(name="bench", mesh_n=mesh_n, n_cases=cases, nt=nt),
+        axes=(
+            ("wave.family", ("band_noise", "ricker")),
+            ("soil.vs", ((1.0, 1.0), (0.8, 1.0))),
+        ),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes (CI)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_scenario.json"))
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--cases", type=int, default=4, help="cases per scenario")
+    ap.add_argument("--nt", type=int, default=12)
+    ap.add_argument("--mesh-n", default="2x2x2")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="fixed method/npart/kset instead of the autotuner")
+    ap.add_argument("--probe", action="store_true",
+                    help="autotune with the on-device microbenchmark probe")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.cases, args.nt = 2, 6
+
+    mesh_n = tuple(int(x) for x in args.mesh_n.split("x"))
+    spec = make_sweep(args.cases, args.nt, mesh_n)
+    plan = sc.make_plan(spec)
+    print(f"[scenario_bench] {plan.n_scenarios} scenario(s) → "
+          f"{len(plan.groups)} compile group(s), {plan.n_cases} case(s)")
+    run = sc.run_plan(
+        plan, autotune=not args.no_autotune, probe=args.probe,
+        log=lambda m: print(f"[scenario_bench] {m}"),
+    )
+
+    groups = []
+    for g in plan.groups:
+        st = run.group_stats[g.key]
+        groups.append({
+            "key": g.key,
+            "scenarios": [s.name for s in g.scenarios],
+            "wave_families": sorted({s.wave.family for s in g.scenarios}),
+            "n_cases": g.n_cases,
+            "choice": dataclasses.asdict(g.choice),
+            "wall_s": st["wall_s"],
+            "cases_per_s": st["cases_per_s"],
+            "mean_iters": st["mean_iters"],
+        })
+        print(f"scenario_{g.key[:8]},{st['wall_s'] / g.n_cases * 1e6:.0f},"
+              f"cases_per_s={st['cases_per_s']:.3f}")
+
+    payload = {
+        "bench": "scenario_sweep",
+        "backend": jax.default_backend(),
+        "smoke": args.smoke,
+        "n_scenarios": plan.n_scenarios,
+        "compile_groups": len(plan.groups),
+        "n_cases": plan.n_cases,
+        "autotune": not args.no_autotune,
+        "probe": args.probe,
+        "groups": groups,
+        "manifest": sc.manifest(plan, run.group_stats),
+    }
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,12 @@ class CampaignConfig:
     ``seed``              recorded in every checkpoint and verified on
                           resume — a checkpoint from a different wave set
                           must not silently splice into this campaign.
+    ``scenario_sig``      opaque scenario identity (``repro.scenario``)
+                          folded into the campaign signature.  Scenario
+                          changes that alter the *mesh* (soil-profile
+                          perturbations) are invisible to the wave/config
+                          fields below; this string is how they still
+                          refuse a foreign checkpoint.
     """
 
     kset: int = 2
@@ -89,6 +95,7 @@ class CampaignConfig:
     keep: int = 3
     case_axis: str = "case"
     seed: int = 0
+    scenario_sig: str = ""
 
     def __post_init__(self):
         if self.kset < 1:
@@ -195,7 +202,8 @@ def _campaign_sig(campaign: "CampaignConfig", cfg, waves: np.ndarray, B: int, ob
     never silently splice into a run computed under different inputs."""
     M, nt = waves.shape[0], waves.shape[1]
     ident = repr((
-        campaign.seed, campaign.kset, campaign.method, M, nt, B,
+        campaign.seed, campaign.kset, campaign.method, campaign.scenario_sig,
+        M, nt, B,
         cfg.dt, cfg.tol, cfg.maxiter, cfg.npart, cfg.nspring,
         cfg.inner_iters, cfg.omega0, str(np.dtype(cfg.rdtype)),
         np.asarray(obs).tolist(),

@@ -12,11 +12,32 @@ Multi-host (run one copy per node; identical flags except ``--process-id``)::
         --coordinator host0:1234 --num-processes 2 --process-id 0 \
         [--cpu-backend]
 
+Scenario sweeps (``repro.scenario``)::
+
+    PYTHONPATH=src python -m repro.launch.campaign --sweep sweep.json \
+        [--autotune [--probe]] [--out shards/] [--ckpt-dir DIR]
+    PYTHONPATH=src python -m repro.launch.campaign --scenario ricker-soft-basin
+
 Flags
 -----
 ``--waves / --nt / --mesh-n / --nspring / --seed``
     Ensemble shape: how many band-limited bedrock waves, time steps per
     case, basin mesh cells, springs per quadrature point, wave RNG seed.
+``--scenario``
+    Run one named catalog scenario (``repro.scenario.CATALOG``) — its wave
+    family / soil profile / observation grid, with the ensemble-shape flags
+    above still setting ``n_cases``/``nt``/``mesh_n``/``nspring``/``seed``.
+``--sweep``
+    A sweep spec (JSON file path or inline JSON; see ``docs/scenarios.md``)
+    expanded by the planner into compile-signature groups, each run as one
+    compiled campaign.  Writes a ``plan.json`` manifest next to the
+    checkpoint dir (or into ``--out``), and per-scenario shard dirs under
+    ``--out/<scenario>/``.  Single-process only.
+``--autotune / --probe``
+    Pick ``(method, npart, kset)`` per plan group with the cost model
+    (``--autotune``); ``--probe`` additionally times the shortlisted
+    candidates on device.  Without ``--autotune``, ``--method``/``--kset``
+    apply to every group.
 ``--kset``
     Cases advanced per device per round (the generalized 2SET residency).
 ``--method``
@@ -66,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--kset", type=int, default=2, help="cases per device per round")
     ap.add_argument("--method", default="proposed2")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="named catalog scenario (repro.scenario.CATALOG)")
+    ap.add_argument("--sweep", default=None,
+                    help="scenario sweep spec: JSON file path or inline JSON")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick (method, npart, kset) per plan group")
+    ap.add_argument("--probe", action="store_true",
+                    help="with --autotune: on-device microbenchmark probe")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="devices on the case axis (default: all visible)")
@@ -109,6 +138,10 @@ def main(argv=None):
         )
     n_dev = args.devices or len(jax.devices())
     dmesh = make_case_mesh(n_dev) if n_dev > 1 else None
+
+    if args.sweep or args.scenario:
+        return _run_scenarios(args, tag, np_, dmesh)
+
     cfg = EnsembleConfig(
         n_waves=args.waves, nt=args.nt,
         mesh_n=tuple(int(x) for x in args.mesh_n.split("x")),
@@ -155,6 +188,54 @@ def main(argv=None):
             y.astype(np.float32), shard_size=args.shard_size,
         )
         print(f"{tag} [shards] wrote {len(paths)} shard(s) to {out_dir}")
+    return 0
+
+
+def _run_scenarios(args, tag, np_, dmesh) -> int:
+    """--scenario / --sweep: plan + run compile-grouped scenario campaigns."""
+    import dataclasses
+
+    from repro import scenario as sc
+
+    if np_ > 1:
+        raise SystemExit(
+            f"{tag} --scenario/--sweep are single-process for now (multi-host "
+            f"campaigns take the plain flag path); drop the distributed flags"
+        )
+    if args.sweep and args.scenario:
+        raise SystemExit(f"{tag} pass --scenario or --sweep, not both")
+    if args.sweep:
+        plan = sc.make_plan(sc.sweep_from_json(args.sweep))
+    else:
+        scn = dataclasses.replace(
+            sc.get(args.scenario),
+            n_cases=args.waves, nt=args.nt, seed=args.seed,
+            mesh_n=tuple(int(x) for x in args.mesh_n.split("x")),
+            nspring=args.nspring,
+        )
+        plan = sc.make_plan([scn])
+    print(f"{tag} plan: {plan.n_scenarios} scenario(s) in {len(plan.groups)} "
+          f"compile group(s), {plan.n_cases} case(s)"
+          + (" [autotune]" if args.autotune else f" method={args.method}"))
+    run = sc.run_plan(
+        plan, autotune=args.autotune, probe=args.probe,
+        method=args.method, kset=args.kset,
+        device_mesh=dmesh, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        out_dir=args.out, shard_size=args.shard_size,
+        stop_after_steps=args.stop_after_steps,
+        log=lambda m: print(f"{tag} {m}"),
+    )
+    if len(run.scenarios) < plan.n_scenarios:
+        print(f"{tag} [stopped] {len(run.scenarios)}/{plan.n_scenarios} "
+              f"scenario(s) finished — relaunch to resume")
+        return 0
+    for name, sr in run.scenarios.items():
+        peak = float(np.abs(sr.responses).max()) if sr.responses.size else 0.0
+        print(f"{tag} [done] {name}: {len(sr.waves)} case(s), "
+              f"peak |v| = {peak:.3e} m/s"
+              + (f", shards → {sr.shard_dir}" if sr.shard_dir else ""))
+    if run.manifest_path:
+        print(f"{tag} [plan] manifest → {run.manifest_path}")
     return 0
 
 

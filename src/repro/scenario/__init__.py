@@ -1,0 +1,17 @@
+"""Scenario subsystem: declarative catalog → sweep planner → autotuner.
+
+``catalog``   hashable :class:`Scenario` dataclasses (wave families, soil
+              perturbations, observation grids) with stable signatures.
+``planner``   sweep expansion, compile-signature grouping, plan manifest,
+              group-by-group campaign execution.
+``autotune``  per-group ``(method, npart, kset)`` via the pipeline cost
+              model + optional on-device probe.
+"""
+from repro.scenario.catalog import (  # noqa: F401
+    CATALOG, ObsSpec, Scenario, SoilSpec, WAVE_FAMILIES, WaveSpec, get,
+)
+from repro.scenario.planner import (  # noqa: F401
+    Plan, PlanGroup, PlanRunResult, ScenarioResult, SweepSpec, expand,
+    make_plan, manifest, run_plan, sweep_from_json, write_manifest,
+)
+from repro.scenario.autotune import TuneChoice, choose  # noqa: F401

@@ -15,6 +15,7 @@ import dataclasses
 import glob
 import json
 import os
+import re
 from typing import Optional
 
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ import numpy as np
 
 from repro.campaign import CampaignConfig, run_campaign
 from repro.fem import meshgen, methods
+from repro.scenario.catalog import WaveSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,16 +41,18 @@ class EnsembleConfig:
 
 
 def random_band_limited_waves(cfg: EnsembleConfig) -> np.ndarray:
-    """Uniform-amplitude waves with content above fmax removed → [N, nt, 3]."""
-    rng = np.random.default_rng(cfg.seed)
-    amp = np.array([cfg.amp_xy, cfg.amp_xy, cfg.amp_z])
-    w = rng.uniform(-1.0, 1.0, size=(cfg.n_waves, cfg.nt, 3)) * amp
-    # zero out FFT bins above fmax
-    freqs = np.fft.rfftfreq(cfg.nt, cfg.dt)
-    keep = freqs <= cfg.fmax
-    W = np.fft.rfft(w, axis=1)
-    W[:, ~keep] = 0.0
-    return np.fft.irfft(W, n=cfg.nt, axis=1)
+    """Uniform-amplitude waves with content above fmax removed → [N, nt, 3].
+
+    Delegates to the scenario catalog's ``band_noise`` family, which —
+    unlike the original implementation here — zeroes the rfft **DC bin**
+    and applies a cosine taper.  Keeping the DC bin gave every input
+    velocity a nonzero mean, i.e. a linear baseline drift in the
+    displacement it integrates to; the regression test pins both the exact
+    zero mean and the bounded endpoint drift.
+    """
+    spec = WaveSpec(family="band_noise", fmax=cfg.fmax,
+                    amp_xy=cfg.amp_xy, amp_z=cfg.amp_z)
+    return spec.synthesize(cfg.n_waves, cfg.nt, cfg.dt, cfg.seed)
 
 
 def simulation_config(cfg: EnsembleConfig) -> methods.SeismicConfig:
@@ -117,10 +121,35 @@ def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 
     return paths
 
 
+_PROC_DIR = re.compile(r"^p\d{2,}$")
+
+
 def load_shards(directory: str) -> tuple[np.ndarray, np.ndarray]:
     """Concatenate every ``shard_*.npz`` in ``directory`` back to (x, y),
-    validated against the index manifest when one is present."""
+    validated against the index manifest when one is present.
+
+    A directory holding no flat shards but ``p00/, p01/, …`` process
+    subdirectories (a multi-host campaign's ``--out`` tree, one subtree per
+    process) is walked in deterministic **(process, shard)** order — sorted
+    process dirs, then sorted shard files within each, every subtree
+    validated against its own index — so multi-host output trains without
+    hand-concatenation.  Flat shards and process dirs must not be mixed.
+    """
     paths = sorted(glob.glob(os.path.join(directory, "shard_*.npz")))
+    pdirs = sorted(
+        (d for d in (os.listdir(directory) if os.path.isdir(directory) else [])
+         if _PROC_DIR.match(d) and os.path.isdir(os.path.join(directory, d))),
+        key=lambda d: int(d[1:]),  # numeric: p100 after p99, not after p10
+    )
+    if paths and pdirs:
+        raise ValueError(
+            f"{directory} mixes flat shard_*.npz files with process dirs "
+            f"{pdirs} — ambiguous ordering; keep one layout"
+        )
+    if not paths and pdirs:
+        parts = [load_shards(os.path.join(directory, d)) for d in pdirs]
+        return (np.concatenate([x for x, _ in parts]),
+                np.concatenate([y for _, y in parts]))
     if not paths:
         raise FileNotFoundError(f"no dataset shards under {directory}")
     xs, ys = [], []
@@ -140,3 +169,52 @@ def load_shards(directory: str) -> tuple[np.ndarray, np.ndarray]:
                 f"regenerate with save_shards"
             )
     return x, y
+
+
+# ---------------------------------------------------------------------------
+# catalog sweeps: diverse training data instead of one wave family
+# ---------------------------------------------------------------------------
+
+
+def generate_sweep(
+    sweep,
+    *,
+    method: str = "proposed2",
+    autotune: bool = False,
+    device_mesh=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    out_dir: Optional[str] = None,
+    shard_size: int = 16,
+) -> tuple[np.ndarray, np.ndarray]:
+    """→ pooled ``(waves, responses)`` over a scenario-catalog sweep.
+
+    The multi-scenario analogue of :func:`generate`: a
+    :class:`~repro.scenario.planner.SweepSpec` (or an already-made
+    :class:`~repro.scenario.planner.Plan`) expands into scenarios — several
+    wave families, soil profiles, observation grids — that run as
+    compile-grouped campaigns (:func:`repro.scenario.planner.run_plan`) and
+    pool into one training set, the diverse-coverage recipe of
+    arXiv:2409.20380 / DeepPhysics.  With ``out_dir`` each scenario also
+    lands in its own shard directory (``out_dir/<name>/``) loadable by
+    :func:`load_shards`.  Responses are taken at observation point 0 so the
+    pooled set matches the surrogate trainer's ``[N, nt, 3]`` format even
+    for grid-observation scenarios.
+    """
+    from repro.scenario.planner import Plan, make_plan, run_plan
+
+    plan = sweep if isinstance(sweep, Plan) else make_plan(sweep)
+    run = run_plan(
+        plan, method=method, autotune=autotune, device_mesh=device_mesh,
+        ckpt_dir=checkpoint_dir, ckpt_every=checkpoint_every,
+        out_dir=out_dir, shard_size=shard_size,
+    )
+    if len(run.scenarios) < plan.n_scenarios:
+        raise RuntimeError(
+            f"sweep incomplete ({len(run.scenarios)}/{plan.n_scenarios} "
+            f"scenarios) — a checkpointed group stopped early; rerun to resume"
+        )
+    order = [s.name for g in plan.groups for s in g.scenarios]
+    x = np.concatenate([run.scenarios[n].waves for n in order])
+    y = np.concatenate([run.scenarios[n].responses[:, :, 0, :] for n in order])
+    return x.astype(np.float32), y.astype(np.float32)

@@ -90,7 +90,10 @@ def fit_shards(cfg: SurrogateConfig, shard_dir: str, **kw) -> tuple[Any, dict]:
 
     The campaign → shards → trainer handoff: generation and training need
     not share a process (the paper's production run generates on the big
-    machine, trains elsewhere)."""
+    machine, trains elsewhere).  ``shard_dir`` may be a flat shard
+    directory or a multi-host ``OUT/pNN/`` tree — :func:`~repro.surrogate.
+    dataset.load_shards` walks process subtrees in deterministic
+    (process, shard) order, so N-process campaign output trains directly."""
     from repro.surrogate.dataset import load_shards
 
     x, y = load_shards(shard_dir)

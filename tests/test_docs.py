@@ -43,6 +43,24 @@ def test_runbook_matches_cli_flags():
         assert f'"{flag}"' in cli, f"{flag} missing from launcher"
 
 
+def test_scenarios_page_covered_and_runnable():
+    """docs/scenarios.md sits in check_docs' default glob, documents the
+    sweep CLI, and carries a runnable-marked sweep snippet for the docs CI
+    job."""
+    path = os.path.join(REPO, "docs", "scenarios.md")
+    with open(path) as f:
+        page = f.read()
+    for needle in ("--sweep", "--scenario", "--autotune", "plan.json"):
+        assert needle in page, f"{needle} undocumented in docs/scenarios.md"
+    marked = [src for lang, _, src in check_docs.extract_blocks(path)
+              if src.lstrip().startswith(check_docs.RUN_MARKER)]
+    assert marked, "docs/scenarios.md has no runnable-marked sweep snippet"
+    with open(os.path.join(REPO, "src", "repro", "launch", "campaign.py")) as f:
+        cli = f.read()
+    for flag in ("--scenario", "--sweep", "--autotune", "--probe"):
+        assert f'"{flag}"' in cli, f"{flag} missing from launcher"
+
+
 def test_extractor_finds_marked_blocks():
     blocks = check_docs.extract_blocks(os.path.join(REPO, "README.md"))
     langs = [lang for lang, _, _ in blocks]

@@ -1,0 +1,490 @@
+"""Scenario subsystem: catalog wave/soil/obs specs, stable signatures,
+sweep planning + compile grouping, autotuner, foreign-scenario refusal,
+multi-host shard loading, and the band-limited-wave DC fix."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import scenario as sc
+from repro.fem import meshgen, methods, quadrature as quad
+from repro.scenario import autotune
+from repro.scenario.catalog import ObsSpec, Scenario, SoilSpec, WaveSpec
+
+
+def _tiny(**kw):
+    kw.setdefault("mesh_n", (2, 2, 2))
+    kw.setdefault("n_cases", 2)
+    kw.setdefault("nt", 6)
+    return Scenario(**kw)
+
+
+# ---------------------------------------------------------------------------
+# wave families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", sc.WAVE_FAMILIES)
+def test_wave_family_shape_zero_mean_deterministic(family):
+    spec = WaveSpec(family=family)
+    w = spec.synthesize(3, 32, 0.01, seed=7)
+    assert w.shape == (3, 32, 3)
+    peak = np.abs(w).max()
+    assert peak > 1e-3  # non-degenerate
+    # zero mean to fp roundoff: the input velocity integrates to a
+    # displacement with no baseline drift
+    assert np.abs(w.sum(axis=1)).max() < 1e-10 * peak * 32
+    np.testing.assert_array_equal(w, spec.synthesize(3, 32, 0.01, seed=7))
+    assert np.abs(w - spec.synthesize(3, 32, 0.01, seed=8)).max() > 1e-6
+
+
+def test_cosine_taper_window():
+    from repro.scenario.catalog import cosine_taper
+
+    t = cosine_taper(64, 0.1)
+    m = 6  # round(0.1 * 64)
+    assert t.shape == (64,)
+    assert (t[m:64 - m] == 1.0).all()
+    assert (np.diff(t[:m]) > 0).all() and (np.diff(t[64 - m:]) < 0).all()
+    assert t[0] < 0.1 and t[-1] < 0.1
+    np.testing.assert_allclose(t, t[::-1])
+    assert (cosine_taper(8, 0.0) == 1.0).all()
+
+
+def test_wave_families_are_distinct():
+    waves = {f: WaveSpec(family=f).synthesize(2, 32, 0.01, 0)
+             for f in sc.WAVE_FAMILIES}
+    fams = list(waves)
+    for i, a in enumerate(fams):
+        for b in fams[i + 1:]:
+            assert np.abs(waves[a] - waves[b]).max() > 1e-6, (a, b)
+
+
+def test_wave_spec_validation():
+    with pytest.raises(ValueError, match="family"):
+        WaveSpec(family="sine")
+    with pytest.raises(ValueError, match="frequencies"):
+        WaveSpec(fmax=0.0)
+    with pytest.raises(ValueError, match="taper"):
+        WaveSpec(taper_frac=0.6)
+
+
+def test_band_noise_dc_fix_regression():
+    """The satellite fix: the old implementation kept the rfft DC bin, so
+    input velocities carried a nonzero mean → linear displacement drift."""
+    from repro.surrogate.dataset import EnsembleConfig, random_band_limited_waves
+
+    cfg = EnsembleConfig(n_waves=8, nt=64, dt=0.01, fmax=2.5)
+    w = random_band_limited_waves(cfg)
+    assert w.shape == (8, 64, 3)
+    peak = np.abs(w).max()
+    assert peak > 1e-3
+
+    # the old path, reproduced: uniform noise, band bins zeroed, DC kept
+    rng = np.random.default_rng(cfg.seed)
+    amp = np.array([cfg.amp_xy, cfg.amp_xy, cfg.amp_z])
+    old = rng.uniform(-1.0, 1.0, size=(cfg.n_waves, cfg.nt, 3)) * amp
+    freqs = np.fft.rfftfreq(cfg.nt, cfg.dt)
+    W = np.fft.rfft(old, axis=1)
+    W[:, freqs > cfg.fmax] = 0.0
+    old = np.fft.irfft(W, n=cfg.nt, axis=1)
+
+    # displacement endpoint after integrating the velocity record
+    drift_new = np.abs(w.sum(axis=1) * cfg.dt).max()
+    drift_old = np.abs(old.sum(axis=1) * cfg.dt).max()
+    assert drift_new < 1e-12          # DC bin exactly zero
+    assert drift_old > 1e3 * max(drift_new, 1e-15)  # the bug being fixed
+    # band limit still enforced
+    Wn = np.fft.rfft(w, axis=1)
+    assert np.abs(Wn[:, freqs > cfg.fmax]).max() < 1e-9
+
+
+def test_band_noise_short_record_keeps_fundamental():
+    """nt·dt < 1/fmax used to band-limit everything away; the fundamental
+    is retained so tiny CI records are not silently all-zero."""
+    w = WaveSpec(fmax=2.5).synthesize(2, 8, 0.01, 0)
+    assert np.abs(w).max() > 1e-3
+    assert np.abs(w.sum(axis=1)).max() < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# soil + observation specs
+# ---------------------------------------------------------------------------
+
+
+def test_soil_spec_materials():
+    soil = SoilSpec(vs=(0.8, 1.0), rho=(1.1, 1.0), gamma_r=(0.5, 1.0),
+                    h_max=(1.2, 1.0))
+    mats = soil.materials()
+    base = [meshgen.SOFT, meshgen.BEDROCK]
+    assert mats[0].vs == pytest.approx(base[0].vs * 0.8)
+    assert mats[0].vp == pytest.approx(base[0].vp * 0.8)   # ratio preserved
+    assert mats[0].rho == pytest.approx(base[0].rho * 1.1)
+    assert mats[0].gamma_r == pytest.approx(base[0].gamma_r * 0.5)
+    assert mats[0].h_max == pytest.approx(base[0].h_max * 1.2)
+    assert mats[1] == base[1]
+    for m in mats:  # λ must stay positive for any vs scale
+        assert m.lam > 0
+    assert len(SoilSpec(vs=(1, 1, 1), rho=(1, 1, 1), gamma_r=(1, 1, 1),
+                        h_max=(1, 1, 1)).materials()) == 3
+    with pytest.raises(ValueError, match="length"):
+        SoilSpec(vs=(1.0,))
+    with pytest.raises(ValueError, match="length"):
+        SoilSpec(vs=(1.0, 1.0, 1.0))  # other tuples still length 2
+    with pytest.raises(ValueError, match="> 0"):
+        SoilSpec(vs=(0.0, 1.0))
+
+
+def test_soil_spec_changes_mesh():
+    a = _tiny().build_mesh()
+    b = _tiny(soil=SoilSpec(vs=(0.8, 1.0))).build_mesh()
+    assert a.materials[0].vs != b.materials[0].vs
+    assert np.abs(a.mass - b.mass).max() == 0  # rho untouched → same mass
+    c = _tiny(soil=SoilSpec(rho=(1.3, 1.0))).build_mesh()
+    assert np.abs(a.mass - c.mass).max() > 0
+
+
+def test_obs_spec_grid():
+    mesh = _tiny().build_mesh()
+    idx = ObsSpec(grid=(2, 2)).indices(mesh)
+    assert idx.shape == (4,)
+    assert set(idx.tolist()) <= set(np.asarray(mesh.surface).tolist())
+    np.testing.assert_array_equal(idx, ObsSpec(grid=(2, 2)).indices(mesh))
+    assert ObsSpec(grid=(1, 1)).indices(mesh).shape == (1,)
+    with pytest.raises(ValueError, match="grid"):
+        ObsSpec(grid=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+
+def test_distinct_scenarios_never_hash_equal():
+    variants = [
+        _tiny(),
+        _tiny(wave=WaveSpec(family="ricker")),
+        _tiny(wave=WaveSpec(fmax=3.0)),
+        _tiny(soil=SoilSpec(vs=(0.8, 1.0))),
+        _tiny(soil=SoilSpec(h_max=(1.2, 1.0))),
+        _tiny(obs=ObsSpec(grid=(2, 2))),
+        _tiny(mesh_n=(3, 2, 2)),
+        _tiny(n_cases=3),
+        _tiny(nt=8),
+        _tiny(dt=0.02),
+        _tiny(nspring=16),
+        _tiny(seed=1),
+    ]
+    sigs = [v.signature() for v in variants]
+    assert len(set(sigs)) == len(sigs), "signature collision between variants"
+    # the name is a label, not physics: relabeling keeps the signature
+    assert dataclasses.replace(_tiny(), name="other").signature() == _tiny().signature()
+
+
+def test_compile_key_groups_wave_families_not_soil():
+    base = _tiny()
+    assert dataclasses.replace(base, wave=WaveSpec(family="chirp")).compile_key() \
+        == base.compile_key()
+    assert dataclasses.replace(base, seed=5).compile_key() == base.compile_key()
+    assert dataclasses.replace(base, n_cases=7).compile_key() == base.compile_key()
+    for other in (
+        dataclasses.replace(base, soil=SoilSpec(vs=(0.8, 1.0))),
+        dataclasses.replace(base, obs=ObsSpec(grid=(2, 1))),
+        dataclasses.replace(base, mesh_n=(3, 2, 2)),
+        dataclasses.replace(base, nt=8),
+        dataclasses.replace(base, nspring=16),
+    ):
+        assert other.compile_key() != base.compile_key()
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+_AXES = (
+    ("wave.family", ("band_noise", "ricker")),
+    ("soil.vs", ((1.0, 1.0), (0.8, 1.0))),
+)
+
+
+def test_expand_grid_and_sampling():
+    spec = sc.SweepSpec(base=_tiny(), axes=_AXES)
+    scns = sc.expand(spec)
+    assert len(scns) == 4
+    assert len({s.name for s in scns}) == 4
+    assert len({s.signature() for s in scns}) == 4
+    sub = sc.expand(dataclasses.replace(spec, samples=3, seed=1))
+    assert len(sub) == 3
+    assert [s.name for s in sub] == [
+        s.name for s in sc.expand(dataclasses.replace(spec, samples=3, seed=1))
+    ]
+    assert sc.expand(sc.SweepSpec(base=_tiny())) == [_tiny()]
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        sc.expand(sc.SweepSpec(base=_tiny(), axes=(("wave.nope", (1, 2)),)))
+
+
+def test_make_plan_groups_by_compile_key():
+    plan = sc.make_plan(sc.SweepSpec(base=_tiny(), axes=_AXES))
+    assert plan.n_scenarios == 4 and plan.n_cases == 8
+    assert len(plan.groups) == 2               # one per soil profile
+    for g in plan.groups:
+        assert len(g.scenarios) == 2           # both wave families share it
+        assert {s.compile_key() for s in g.scenarios} == {g.key}
+        assert g.case_slices() == [(0, 2), (2, 4)]
+    assert plan.groups[0].signature() != plan.groups[1].signature()
+
+
+def test_sweep_from_json_and_manifest(tmp_path):
+    spec = sc.sweep_from_json(json.dumps({
+        "base": {"n_cases": 2, "nt": 6, "mesh_n": [2, 2, 2],
+                 "wave": {"fmax": 3.0}},
+        "axes": {"wave.family": ["band_noise", "chirp"]},
+    }))
+    assert spec.base.wave.fmax == 3.0 and spec.base.mesh_n == (2, 2, 2)
+    plan = sc.make_plan(spec)
+    assert len(plan.groups) == 1 and plan.n_scenarios == 2
+    path = sc.write_manifest(plan, str(tmp_path / "plan.json"))
+    with open(path) as f:
+        m = json.load(f)
+    assert m["n_scenarios"] == 2
+    assert m["groups"][0]["key"] == plan.groups[0].key
+    assert [s["name"] for s in m["groups"][0]["scenarios"]] == \
+        [s.name for s in plan.groups[0].scenarios]
+    with pytest.raises(ValueError, match="neither"):
+        sc.sweep_from_json("{not json")
+
+
+def test_sweep_compiles_once_per_group(monkeypatch):
+    """The acceptance compile-counter: a 2-wave-family sweep is one compile
+    group → exactly one compiled campaign chunk; adding a second soil
+    profile adds exactly one more."""
+    import repro.campaign.runner as runner
+
+    calls = []
+    orig = runner.make_campaign_chunk
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(runner, "make_campaign_chunk", counting)
+
+    base = _tiny(nt=4, n_cases=1)
+    two_fams = sc.make_plan(sc.SweepSpec(base=base, axes=(_AXES[0],)))
+    assert len(two_fams.groups) == 1
+    run = sc.run_plan(two_fams)
+    assert len(calls) == 1, "2 wave families must share one compiled campaign"
+    assert len(run.scenarios) == 2
+
+    calls.clear()
+    four = sc.make_plan(sc.SweepSpec(base=base, axes=_AXES))
+    assert len(four.groups) == 2
+    run = sc.run_plan(four)
+    assert len(calls) == 2, "one compile per (mesh, physics) group exactly"
+    assert len(run.scenarios) == 4
+    # grouped results still split back into per-scenario responses
+    for sr in run.scenarios.values():
+        assert sr.waves.shape == (1, 4, 3)
+        assert sr.responses.shape == (1, 4, 1, 3)
+
+
+def test_resume_under_changed_scenario_refused(tmp_path):
+    """scenario_sig closes the soil hole: a soil perturbation changes the
+    mesh but not the waves or SeismicConfig, so only the scenario signature
+    can refuse the checkpoint."""
+    from repro.campaign import CampaignConfig, run_campaign
+
+    a = _tiny(nt=6)
+    b = dataclasses.replace(a, soil=SoilSpec(vs=(0.8, 1.0)))
+    assert a.signature() != b.signature()
+    waves = a.waves()
+    np.testing.assert_array_equal(waves, b.waves())  # waves identical
+    cfg = a.sim_config()
+    cc = CampaignConfig(
+        kset=2, method="proposed2", checkpoint_dir=str(tmp_path / "ckpt"),
+        checkpoint_every=2, scenario_sig=a.signature(),
+    )
+    part = run_campaign(a.build_mesh(), cfg, waves, campaign=cc,
+                        stop_after_steps=3)
+    assert not part.completed
+    with pytest.raises(ValueError, match="different campaign"):
+        run_campaign(
+            b.build_mesh(), cfg, waves,
+            campaign=dataclasses.replace(cc, scenario_sig=b.signature()),
+        )
+    # same scenario resumes fine
+    res = run_campaign(a.build_mesh(), cfg, waves, campaign=cc)
+    assert res.completed and res.resumed_from is not None
+
+
+def test_run_plan_checkpoint_resume(tmp_path):
+    """A sweep killed mid-group resumes from the group checkpoint and the
+    manifest reflects completion."""
+    plan = sc.make_plan(sc.SweepSpec(base=_tiny(nt=6), axes=(_AXES[0],)))
+    kw = dict(ckpt_dir=str(tmp_path / "ck"), ckpt_every=2)
+    partial = sc.run_plan(plan, stop_after_steps=3, **kw)
+    assert len(partial.scenarios) == 0
+    assert os.path.exists(partial.manifest_path)
+    full = sc.run_plan(plan, **kw)
+    assert len(full.scenarios) == 2
+    with open(full.manifest_path) as f:
+        m = json.load(f)
+    assert all(g.get("completed") for g in m["groups"])
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_model_choice_valid_and_deterministic():
+    scn = _tiny()
+    mesh, cfg = scn.build_mesh(), scn.sim_config()
+    npts = mesh.n_elem * quad.NPOINT
+    ch = autotune.choose(mesh, cfg, n_cases=8)
+    assert ch == autotune.choose(mesh, cfg, n_cases=8)
+    assert ch.method in methods.METHODS
+    assert npts % ch.npart == 0
+    assert 1 <= ch.kset <= 4
+    assert ch.source == "model" and ch.modeled_case_s > 0
+    json.dumps(dataclasses.asdict(ch))  # manifest-serializable
+    # plenty of device memory → the paper's best rung (EBE 2SET resident)
+    assert ch.method == "proposed2"
+    # kset never exceeds what the ensemble can fill
+    assert autotune.choose(mesh, cfg, n_cases=2).kset <= 2
+
+
+def test_autotune_memory_pressure_switches_to_streaming():
+    scn = _tiny()
+    mesh, cfg = scn.build_mesh(), scn.sim_config()
+    state = autotune.spring_state_bytes(mesh, cfg)
+    # budget below one resident member but above two streamed blocks
+    ch = autotune.choose(mesh, cfg, n_cases=8, device_gb=0.9 * state / 1e9)
+    assert ch.method == "proposed1" and ch.npart > 1
+    with pytest.raises(ValueError, match="no .* candidate fits"):
+        autotune.choose(mesh, cfg, n_cases=8, device_gb=1e-9)
+
+
+def test_probe_shortlist_covers_every_method():
+    """The probe arbitrates *between* methods: even when one method's
+    candidates fill the top of the model ranking, every distinct method's
+    best must still be probed."""
+    scored = [
+        (1.0, "proposed2", 1, 4),
+        (1.1, "proposed2", 1, 3),
+        (1.2, "proposed2", 1, 2),
+        (2.0, "proposed1", 8, 4),
+        (2.5, "proposed1", 4, 4),
+    ]
+    short = autotune._probe_shortlist(scored, probe_top=2)
+    assert {c[1] for c in short} == {"proposed2", "proposed1"}
+    assert short[0] == scored[0]
+    # padding beyond one-per-method takes the best-overall remainder
+    short3 = autotune._probe_shortlist(scored, probe_top=3)
+    assert len(short3) == 3 and scored[1] in short3
+
+
+def test_run_plan_reuses_tuned_choices_on_resume(tmp_path, monkeypatch):
+    """The tuned knobs are part of the campaign signature, so a relaunched
+    --autotune sweep must re-use the manifest's recorded choices instead of
+    re-tuning (a probe re-run could flip the winner and refuse the group's
+    own checkpoint)."""
+    plan = sc.make_plan(sc.SweepSpec(base=_tiny(nt=4, n_cases=1),
+                                     axes=(_AXES[0],)))
+    kw = dict(autotune=True, ckpt_dir=str(tmp_path / "ck"), ckpt_every=2)
+    first = sc.run_plan(plan, **kw)
+    assert len(first.scenarios) == 2
+
+    def boom(*a, **k):
+        raise AssertionError("choose() must not re-run on resume")
+
+    monkeypatch.setattr(autotune, "choose", boom)
+    plan2 = sc.make_plan(sc.SweepSpec(base=_tiny(nt=4, n_cases=1),
+                                      axes=(_AXES[0],)))
+    again = sc.run_plan(plan2, **kw)
+    assert len(again.scenarios) == 2
+    assert plan2.groups[0].choice == plan.groups[0].choice
+
+
+def test_autotune_candidate_nparts():
+    assert autotune.candidate_nparts(192, cap=8) == [1, 2, 3, 4, 6, 8]
+    assert autotune.candidate_nparts(10, cap=4) == [1, 2]
+
+
+def test_autotune_probe():
+    scn = _tiny(nt=4)
+    mesh, cfg = scn.build_mesh(), scn.sim_config()
+    ch = autotune.choose(
+        mesh, cfg, n_cases=2, probe=True, probe_steps=2,
+        waves=scn.waves(), obs=scn.obs.indices(mesh),
+    )
+    assert ch.source == "probe"
+    assert ch.probed_case_s > 0 and ch.method in methods.METHODS
+    with pytest.raises(ValueError, match="probe"):
+        autotune.choose(mesh, cfg, n_cases=2, probe=True)
+
+
+# ---------------------------------------------------------------------------
+# multi-host shard trees + sweep dataset generation
+# ---------------------------------------------------------------------------
+
+
+def _fake_shards(d, n, nt, base):
+    x = np.arange(n * nt * 3, dtype=np.float32).reshape(n, nt, 3) + base
+    y = -x
+    from repro.surrogate.dataset import save_shards
+
+    save_shards(str(d), x, y, shard_size=2)
+    return x, y
+
+
+def test_load_shards_walks_process_trees(tmp_path):
+    from repro.surrogate.dataset import load_shards
+
+    root = tmp_path / "OUT"
+    x1, y1 = _fake_shards(root / "p00", 3, 4, base=0.0)
+    x0, y0 = _fake_shards(root / "p01", 2, 4, base=1000.0)
+    x, y = load_shards(str(root))
+    np.testing.assert_array_equal(x, np.concatenate([x1, x0]))
+    np.testing.assert_array_equal(y, np.concatenate([y1, y0]))
+    # deterministic: a second walk is identical
+    x2, _ = load_shards(str(root))
+    np.testing.assert_array_equal(x, x2)
+    # numeric process order: p100 sorts after p01, not between p01 and p02
+    x100, _ = _fake_shards(root / "p100", 1, 4, base=2000.0)
+    x, _ = load_shards(str(root))
+    np.testing.assert_array_equal(x, np.concatenate([x1, x0, x100]))
+    # mixing flat shards and process dirs is ambiguous → refused
+    _fake_shards(root, 1, 4, base=5.0)
+    with pytest.raises(ValueError, match="mixes"):
+        load_shards(str(root))
+
+
+def test_fit_shards_on_process_tree(tmp_path):
+    from repro.surrogate.model import SurrogateConfig
+    from repro.surrogate.train import fit_shards
+
+    root = tmp_path / "OUT"
+    _fake_shards(root / "p00", 3, 8, base=0.0)
+    _fake_shards(root / "p01", 3, 8, base=1.0)
+    cfg = SurrogateConfig(n_c=1, n_lstm=1, kernel=3, latent=8, lr=1e-4)
+    _, info = fit_shards(cfg, str(root), steps=1, batch=2)
+    assert np.isfinite(info["val_mae"])
+
+
+def test_generate_sweep_pools_scenarios(tmp_path):
+    from repro.surrogate.dataset import generate_sweep, load_shards
+
+    spec = sc.SweepSpec(base=_tiny(nt=4, n_cases=1), axes=(_AXES[0],))
+    x, y = generate_sweep(spec, out_dir=str(tmp_path / "out"))
+    assert x.shape == (2, 4, 3) and y.shape == (2, 4, 3)
+    assert x.dtype == np.float32
+    dirs = sorted(os.listdir(tmp_path / "out"))
+    assert len([d for d in dirs if (tmp_path / "out" / d).is_dir()]) == 2
+    for d in dirs:
+        p = tmp_path / "out" / d
+        if p.is_dir():
+            xs, ys = load_shards(str(p))
+            assert xs.shape == (1, 4, 3)
