@@ -1,8 +1,27 @@
-"""Kernel micro-benchmarks: jitted oracle wall time on this CPU (the Pallas
-kernels execute via interpret mode here — TPU timing is dry-run territory),
-plus the analytic per-call FLOP counts used by the roofline."""
+"""Kernel micro-benchmarks, per backend → ``BENCH_kernels.json``.
+
+Times every FEM/NN hotspot kernel on each backend the dispatch layer
+(``repro.fem.backend``) can resolve on this machine — the pure-jnp oracle
+always, compiled Pallas on TPU/GPU, interpret-mode Pallas elsewhere — and
+writes a per-kernel, per-backend table with µs/call and speedup vs the
+jnp oracle.  ``repro.core.pipeline.load_kernel_calibration`` turns that
+table into the measured per-unit rates the scenario autotuner's cost model
+consumes in place of its hard-coded ranking constants
+(``scenario/autotune.MODEL_FLOPS`` et al.).
+
+On this CPU container interpret-mode Pallas is a correctness harness, not
+a fast path, so its speedup column is ≪ 1 — which is exactly why ``auto``
+dispatch resolves to jnp here and to compiled Pallas on an accelerator;
+the table records whichever regime is real on the machine that ran it.
+
+Usage:
+    PYTHONPATH=src python benchmarks/kernels_bench.py [--smoke] \
+        [--out BENCH_kernels.json] [--reps 5] [--no-interpret]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import time
@@ -14,9 +33,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fem import meshgen, multispring as ms, quadrature as quad
-from repro.kernels.ebe_matvec import ebe_element_matvec_ref
-from repro.kernels.flash_attention.ref import attention_ref
-from repro.models.layers import flash_attention_jnp
 
 
 def _bench(fn, *args, reps=5):
@@ -28,42 +44,139 @@ def _bench(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
-def main():
-    rows = []
-    # EBE element product
-    mesh = meshgen.generate(3, 3, 3, pad_elems_to=8)
+def _backends(include_interpret: bool) -> list[str]:
+    """Backends measurable on this machine, jnp oracle first."""
+    out = ["jnp"]
+    if jax.default_backend() in ("tpu", "gpu"):
+        out.append("pallas")
+    elif include_interpret:
+        out.append("pallas_interpret")
+    return out
+
+
+def bench_ebe(mesh, backends, *, tile_e, reps):
+    from repro.kernels.ebe_matvec import ebe_element_matvec_pallas, ebe_element_matvec_ref
+
     E = mesh.n_elem
     rng = np.random.default_rng(0)
     u = jnp.asarray(rng.normal(size=(E, 10, 3)), jnp.float32)
     D = jnp.asarray(np.tile(np.eye(6), (E, quad.NPOINT, 1, 1)), jnp.float32)
     Ji = jnp.asarray(mesh.Jinv, jnp.float32)
     wd = jnp.asarray(mesh.wdet, jnp.float32)
-    f = jax.jit(lambda *a: ebe_element_matvec_ref(*a))
-    us = _bench(f, u, D, Ji, wd, None)
+    fns = {
+        "jnp": jax.jit(lambda *a: ebe_element_matvec_ref(*a, None)),
+        "pallas": lambda *a: ebe_element_matvec_pallas(
+            *a, None, tile_e=tile_e, interpret=False),
+        "pallas_interpret": lambda *a: ebe_element_matvec_pallas(
+            *a, None, tile_e=tile_e, interpret=True),
+    }
     flops = E * quad.NPOINT * (2 * 90 + 2 * 90 + 72 + 2 * 90)
-    rows.append(("ebe_matvec_ref", us, f"{flops/us*1e-3:.2f}GFLOP/s_equiv"))
+    return {
+        "unit": "element",
+        "units": E,
+        "flops_per_call": flops,
+        "backends": {b: {"us_per_call": _bench(fns[b], u, D, Ji, wd, reps=reps)}
+                     for b in backends},
+    }
 
-    # multispring update
-    P, S = E * quad.NPOINT, 30
+
+def bench_multispring(mesh, backends, *, tile_p, reps):
+    from repro.kernels.multispring import multispring_pallas
+
+    P, S = mesh.n_elem * quad.NPOINT, 30
+    rng = np.random.default_rng(0)
     params = ms.material_params_for_mesh(mesh, jnp.float32)
     n, w = ms.spring_directions(S)
+    n_j, w_j = jnp.asarray(n, jnp.float32), jnp.asarray(w, jnp.float32)
     st = ms.init_state(P, S, jnp.float32)
     eps = jnp.asarray(rng.normal(scale=1e-4, size=(P, 6)), jnp.float32)
-    g = jax.jit(lambda e, s: ms.update(e, s, params, jnp.asarray(n, jnp.float32), jnp.asarray(w, jnp.float32)))
-    us = _bench(g, eps, st)
-    rows.append(("multispring_ref", us, f"{P*S} springs"))
+    fns = {
+        "jnp": jax.jit(lambda e, s: ms.update(e, s, params, n_j, w_j)),
+        "pallas": jax.jit(lambda e, s: multispring_pallas(
+            e, s, params, n_j, w_j, tile_p=tile_p, interpret=False)),
+        "pallas_interpret": jax.jit(lambda e, s: multispring_pallas(
+            e, s, params, n_j, w_j, tile_p=tile_p, interpret=True)),
+    }
+    return {
+        "unit": "point_spring",
+        "units": P * S,
+        "backends": {b: {"us_per_call": _bench(fns[b], eps, st, reps=reps)}
+                     for b in backends},
+    }
 
-    # flash attention (jnp scan impl — the trainable path)
-    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
-    h = jax.jit(lambda q, k: flash_attention_jnp(q, k, k, causal=True, block_q=128, block_k=128))
-    us = _bench(h, q, k)
-    fl = 4 * 1 * 4 * 256 * 256 * 64
-    rows.append(("flash_attention_jnp", us, f"{fl/us*1e-3:.2f}GFLOP/s_equiv"))
 
-    for name, us, extra in rows:
-        print(f"{name},{us:.1f},{extra}")
-    return rows
+def bench_flash_attention(backends, *, seq, reps):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.layers import flash_attention_jnp
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 4, seq, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, seq, 64)), jnp.float32)
+    fns = {
+        "jnp": jax.jit(lambda q, k: flash_attention_jnp(
+            q, k, k, causal=True, block_q=128, block_k=128)),
+        "pallas": lambda q, k: flash_attention_pallas(
+            q, k, k, causal=True, tq=32, tk=128, interpret=False),
+        "pallas_interpret": lambda q, k: flash_attention_pallas(
+            q, k, k, causal=True, tq=32, tk=128, interpret=True),
+    }
+    return {
+        "unit": "flop",
+        "units": 4 * 1 * 4 * seq * seq * 64,
+        "backends": {b: {"us_per_call": _bench(fns[b], q, k, reps=reps)}
+                     for b in backends},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes (CI)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_kernels.json here (default: print only)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--mesh-n", default=None, help="e.g. 3x3x3")
+    ap.add_argument("--tile-e", type=int, default=512)
+    ap.add_argument("--tile-p", type=int, default=256)
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="skip the (slow) interpret-mode Pallas rows on CPU")
+    args = ap.parse_args(argv)
+
+    mesh_n = args.mesh_n or ("2x2x2" if args.smoke else "3x3x3")
+    reps = 2 if args.smoke else args.reps
+    seq = 64 if args.smoke else 256
+    mesh = meshgen.generate(*(int(x) for x in mesh_n.split("x")), pad_elems_to=8)
+    backends = _backends(include_interpret=not args.no_interpret)
+
+    kernels = {
+        "ebe_matvec": bench_ebe(mesh, backends, tile_e=args.tile_e, reps=reps),
+        "multispring": bench_multispring(mesh, backends, tile_p=args.tile_p, reps=reps),
+        "flash_attention": bench_flash_attention(backends, seq=seq, reps=reps),
+    }
+    for entry in kernels.values():
+        ref = entry["backends"]["jnp"]["us_per_call"]
+        for b in entry["backends"].values():
+            b["speedup_vs_jnp"] = ref / b["us_per_call"]
+
+    payload = {
+        "bench": "kernels",
+        "platform": jax.default_backend(),
+        "mesh_n": mesh_n,
+        "smoke": args.smoke,
+        "tile_e": args.tile_e,
+        "tile_p": args.tile_p,
+        "kernels": kernels,
+    }
+    # harness CSV contract: name,us_per_call,derived
+    for name, entry in kernels.items():
+        for b, row in entry["backends"].items():
+            print(f"{name}[{b}],{row['us_per_call']:.1f},"
+                  f"x{row['speedup_vs_jnp']:.3f}_vs_jnp")
+    if args.out:
+        out_path = os.path.abspath(args.out)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out_path}")
+    return payload
 
 
 if __name__ == "__main__":

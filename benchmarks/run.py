@@ -13,10 +13,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    print("== kernels (µs/call, CPU oracle timings) ==")
+    print("== kernels (µs/call per backend) ==")
     from benchmarks import kernels_bench
 
-    kernels_bench.main()
+    # full fidelity on purpose: BENCH_kernels.json is the calibration
+    # artifact the autotuner consumes — smoke-quality rates (tiny mesh, 2
+    # reps, dispatch overhead dominating) must never overwrite it
+    kernels_bench.main(["--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_kernels.json")])
 
     print("\n== Table 1: four methods, time-to-solution ==")
     from benchmarks import table1_methods

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fem import meshgen, methods, quadrature as quad, solver, spmv
+from repro.fem import backend as fem_backend, meshgen, methods, quadrature as quad, solver, spmv
 
 
 def _time(fn, *args, reps=3):
@@ -32,7 +32,7 @@ def _time(fn, *args, reps=3):
 def main(n: int = 3, nspring: int = 12):
     mesh = meshgen.generate(n, n, n, pad_elems_to=8)
     cfg = methods.SeismicConfig(dt=0.01, tol=1e-6, maxiter=400, npart=4, nspring=nspring)
-    ops = methods.FemOperators(mesh, cfg)
+    ops = fem_backend.make_operators(mesh, cfg)
     carry = methods.initial_carry(ops)
     nm, springs, D, alpha, beta_e = carry
     b = jax.random.normal(jax.random.key(0), (mesh.ndof,), cfg.dtype)

@@ -59,7 +59,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.stream import broadcast_kset, pad_kset
-from repro.fem import methods
+from repro.fem import backend as fem_backend, methods
 from repro.parallel import distributed as dist
 from repro.parallel.sharding import shard_map
 from repro.training.checkpoint import CheckpointManager
@@ -192,20 +192,26 @@ def _chunk_bounds(nt: int, every: int) -> list[tuple[int, int]]:
     return [(t, min(t + every, nt)) for t in range(0, nt, every)]
 
 
-def _campaign_sig(campaign: "CampaignConfig", cfg, waves: np.ndarray, B: int, obs) -> np.ndarray:
+def _campaign_sig(campaign: "CampaignConfig", cfg, waves: np.ndarray, B: int, obs,
+                  kernel_backend: str = "") -> np.ndarray:
     """Campaign identity, verified on resume.
 
     Covers everything that shapes the trajectory — the wave *data* itself
     (not just the seed: ``run_campaign`` accepts arbitrary waves), round
     geometry, the *method* and the full simulation physics
-    (dt/tol/npart/nspring/…), and the observation set — so a checkpoint can
-    never silently splice into a run computed under different inputs."""
+    (dt/tol/npart/nspring/…), the solver-amortization knobs
+    (``warm_start``/``precond_every`` change the carry structure *and* the
+    within-tolerance trajectory), the resolved kernel backend (a checkpoint
+    records what produced it — jnp and Pallas agree only to rounding), and
+    the observation set — so a checkpoint can never silently splice into a
+    run computed under different inputs."""
     M, nt = waves.shape[0], waves.shape[1]
     ident = repr((
         campaign.seed, campaign.kset, campaign.method, campaign.scenario_sig,
         M, nt, B,
         cfg.dt, cfg.tol, cfg.maxiter, cfg.npart, cfg.nspring,
         cfg.inner_iters, cfg.omega0, str(np.dtype(cfg.rdtype)),
+        cfg.warm_start, cfg.precond_every, kernel_backend,
         np.asarray(obs).tolist(),
         zlib.crc32(np.ascontiguousarray(waves).tobytes()),
     ))
@@ -360,7 +366,7 @@ def run_campaign(
     obs = np.asarray(observe if observe is not None else mesh.surface[:1])
     n_obs = len(obs)
 
-    ops = methods.FemOperators(mesh, cfg)
+    ops = fem_backend.make_operators(mesh, cfg)
     chunk_fn, carry0 = make_campaign_chunk(
         ops, campaign.method, obs, device_mesh=topo.exec_mesh,
         case_axis=campaign.case_axis,
@@ -369,7 +375,9 @@ def run_campaign(
     bounds = _chunk_bounds(nt, campaign.checkpoint_every)
     wave_all = jnp.asarray(padded, cfg.rdtype)
     vdt = np.dtype(cfg.rdtype)
-    sig = _campaign_sig(campaign, cfg, waves, B, obs)
+    sig = _campaign_sig(
+        campaign, cfg, waves, B, obs, ops.kernel_backend.describe()
+    )
 
     mgr = (
         CheckpointManager(

@@ -10,6 +10,9 @@ modeled pipeline time, the break-even host-link bandwidth (the paper's
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +142,71 @@ def stream_time(
         device_blocks=prefetch + 1,
         kset=kset,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCalibration:
+    """Measured per-unit kernel rates feeding the stream/solver cost models.
+
+    The autotuner's ranking constants (``scenario/autotune.MODEL_FLOPS`` et
+    al.) encode the *shape* of the paper's trade-offs but no machine's
+    absolute speed.  ``benchmarks/kernels_bench.py`` measures the real
+    per-backend kernel timings on the current machine and writes
+    ``BENCH_kernels.json``; :func:`load_kernel_calibration` turns that
+    artifact into per-unit seconds, which the autotuner then uses to build
+    :func:`stream_time`'s ``compute_s_per_block`` and the solver flop terms
+    instead of the hard-coded constants.  Rates scale linearly in their
+    unit counts (points×springs for the constitutive update, elements for
+    the EBE product) — exact at the measured shape, a calibrated linear
+    model elsewhere, which is all a *ranking* needs.
+    """
+
+    multispring_s_per_point_spring: float  # s per (quadrature point × spring)
+    ebe_s_per_elem: float                  # s per element per EBE matvec
+    backend: str = "jnp"                   # backend the rates were measured on
+    source: str = "constants"              # file the table came from
+
+    def multispring_s(self, npts: int, nspring: int) -> float:
+        return npts * nspring * self.multispring_s_per_point_spring
+
+    def ebe_matvec_s(self, n_elem: int) -> float:
+        return n_elem * self.ebe_s_per_elem
+
+
+def _pick_backend(backends: dict, prefer: Optional[str]) -> tuple[str, dict]:
+    if prefer and prefer in backends:
+        return prefer, backends[prefer]
+    name = min(backends, key=lambda b: backends[b]["us_per_call"])
+    return name, backends[name]
+
+
+def load_kernel_calibration(
+    path: str, backend: Optional[str] = None
+) -> Optional[KernelCalibration]:
+    """``BENCH_kernels.json`` → :class:`KernelCalibration`, or ``None`` if
+    the artifact does not exist (callers fall back to model constants).
+
+    ``backend`` prefers one backend's measured rates (e.g. the backend the
+    campaign will actually run); default is the fastest measured one per
+    kernel — what ``backend="auto"`` dispatch would execute.
+    """
+    if not path or not os.path.exists(path):
+        return None
+    with open(path) as f:
+        table = json.load(f)
+    kernels = table.get("kernels", {})
+    try:
+        ms, ebe = kernels["multispring"], kernels["ebe_matvec"]
+        ms_name, ms_entry = _pick_backend(ms["backends"], backend)
+        ebe_name, ebe_entry = _pick_backend(ebe["backends"], backend)
+        return KernelCalibration(
+            multispring_s_per_point_spring=ms_entry["us_per_call"] * 1e-6 / ms["units"],
+            ebe_s_per_elem=ebe_entry["us_per_call"] * 1e-6 / ebe["units"],
+            backend=ms_name if ms_name == ebe_name else f"{ebe_name}+{ms_name}",
+            source=os.path.abspath(path),
+        )
+    except (KeyError, TypeError, ZeroDivisionError) as e:
+        raise ValueError(f"malformed kernel-benchmark table {path}: {e}") from None
 
 
 def breakeven_link_gbps(*, compute_s_per_block: float, bytes_per_block: float) -> float:

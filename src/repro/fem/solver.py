@@ -27,6 +27,18 @@ def _vdot(a, b):
     return jnp.sum(a * b)
 
 
+def _tiny(x: jnp.ndarray) -> float:
+    """Dtype-aware denominator guard.
+
+    The former hard-coded ``1e-300`` flushes to ``0.0`` in float32 — the
+    dtype the EBE inner preconditioner solves in — so a zero residual there
+    divided by exactly zero.  ``finfo.tiny`` (the smallest normal number)
+    is representable in every float dtype and still orders of magnitude
+    below any meaningful denominator.
+    """
+    return float(jnp.finfo(x.dtype).tiny)
+
+
 def pcg(
     matvec: Callable[[jnp.ndarray], jnp.ndarray],
     b: jnp.ndarray,
@@ -38,11 +50,13 @@ def pcg(
 ) -> CGResult:
     """Standard PCG on ‖r‖/‖b‖ ≤ tol, jit/scan-safe (lax.while_loop)."""
     x = jnp.zeros_like(b) if x0 is None else x0
+    eps = _tiny(b)
     r = b - matvec(x)
     z = precond(r)
     p = z
     rz = _vdot(r, z)
-    bnorm = jnp.sqrt(_vdot(b, b)) + 1e-300
+    bnorm = jnp.sqrt(_vdot(b, b)) + eps
+
     def cond(state):
         _, r, *_, it = state
         return (jnp.sqrt(_vdot(r, r)) / bnorm > tol) & (it < maxiter)
@@ -50,12 +64,12 @@ def pcg(
     def body(state):
         x, r, p, rz, it = state
         Ap = matvec(p)
-        alpha = rz / (_vdot(p, Ap) + 1e-300)
+        alpha = rz / (_vdot(p, Ap) + eps)
         x = x + alpha * p
         r = r - alpha * Ap
         z = precond(r)
         rz_new = _vdot(r, z)
-        beta = rz_new / (rz + 1e-300)
+        beta = rz_new / (rz + eps)
         p = z + beta * p
         return (x, r, p, rz_new, it + 1)
 
@@ -75,10 +89,11 @@ def fcg(
     """Flexible CG: β via Polak–Ribière so an inexact (iterative, mixed-
     precision) preconditioner is admissible."""
     x = jnp.zeros_like(b) if x0 is None else x0
+    eps = _tiny(b)
     r = b - matvec(x)
     z = inner_precond(r)
     p = z
-    bnorm = jnp.sqrt(_vdot(b, b)) + 1e-300
+    bnorm = jnp.sqrt(_vdot(b, b)) + eps
 
     def cond(state):
         _, r, *_rest, it = state
@@ -87,12 +102,12 @@ def fcg(
     def body(state):
         x, r, p, z, it = state
         Ap = matvec(p)
-        alpha = _vdot(r, z) / (_vdot(p, Ap) + 1e-300)
+        alpha = _vdot(r, z) / (_vdot(p, Ap) + eps)
         x = x + alpha * p
         r_new = r - alpha * Ap
         z_new = inner_precond(r_new)
         # Polak–Ribière (flexible): β = z_new·(r_new − r) / z·r
-        beta = _vdot(z_new, r_new - r) / (_vdot(z, r) + 1e-300)
+        beta = _vdot(z_new, r_new - r) / (_vdot(z, r) + eps)
         p = z_new + beta * p
         return (x, r_new, p, z_new, it + 1)
 
@@ -117,6 +132,7 @@ def make_inner_pcg_preconditioner(
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
         r32 = r.astype(jnp.float32)
+        eps = _tiny(r32)
         x = jnp.zeros_like(r32)
         rr = r32
         z = block_jacobi32(rr)
@@ -126,12 +142,12 @@ def make_inner_pcg_preconditioner(
         def body(i, state):
             x, rr, p, rz = state
             Ap = matvec32(p)
-            alpha = rz / (_vdot(p, Ap) + 1e-30)
+            alpha = rz / (_vdot(p, Ap) + eps)
             x = x + alpha * p
             rr = rr - alpha * Ap
             z = block_jacobi32(rr)
             rz_new = _vdot(rr, z)
-            beta = rz_new / (rz + 1e-30)
+            beta = rz_new / (rz + eps)
             p = z + beta * p
             return (x, rr, p, rz_new)
 

@@ -2,13 +2,14 @@
 
 The paper's Proposed Method 2 converts the memory-bandwidth-bound CRS SpMV
 into on-the-fly element products (EBE, [8]) — more FLOPs, far less memory
-traffic, no stored matrix.  TPU adaptation (DESIGN.md §2): the scatter-add
+traffic, no stored matrix.  TPU adaptation (DESIGN.md §8): the scatter-add
 that CUDA does with L2 atomics becomes a *sorted segment-sum* over a
 precomputed permutation (deterministic, TPU-idiomatic).
 
 The jnp implementations here are the reference path; kernels/ebe_matvec
 holds the Pallas kernel for the per-element contraction (the flop hotspot),
-wired in through the same gather/scatter maps.
+wired in through the same gather/scatter maps whenever the dispatch layer
+(repro.fem.backend) resolves to it.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """Pallas TPU kernel for the EBE element product (Proposed Method 2 hotspot).
 
-TPU adaptation of the paper's CUDA EBE kernel (DESIGN.md §2):
+TPU adaptation of the paper's CUDA EBE kernel (DESIGN.md §8):
 
 * the **element index lives on the 128-lane axis** — every per-element
   scalar quantity (a Jacobian entry, one strain component at one Gauss

@@ -42,6 +42,23 @@ Flags
     Cases advanced per device per round (the generalized 2SET residency).
 ``--method``
     One of ``repro.fem.methods.METHODS`` (default ``proposed2``).
+``--kernel-backend / --ebe-backend / --ms-backend / --tile-e / --tile-p``
+    Kernel dispatch (``repro.fem.backend``): ``auto`` (default) runs
+    compiled Pallas on TPU/GPU and the jnp oracle elsewhere; ``pallas``
+    forces the Pallas kernels (interpret mode off-accelerator — the CI
+    smoke's wiring check); ``jnp`` forces the oracle.  The per-kernel
+    overrides pin the EBE / multispring kernel independently, and the tile
+    flags are the Pallas tiling knobs.  The resolved backend is folded into
+    the campaign signature — resuming a checkpoint under a different
+    backend is refused.
+``--warm-start / --no-warm-start / --precond-every``
+    Solver amortization: warm-start each step's CG from the previous δu
+    (default on — trajectory equal within solver tolerance, fewer
+    iterations), and refresh the EBE block-Jacobi preconditioner every N
+    steps instead of every step.  Both are signature-bearing.
+``--calibration``
+    ``BENCH_kernels.json`` (from ``benchmarks/kernels_bench.py``) feeding
+    measured kernel rates into the ``--autotune`` cost model.
 ``--host-devices`` / ``--devices``
     Force N virtual host devices (local rehearsal) / restrict the case
     mesh to the first N devices (default: every visible device — global
@@ -87,6 +104,24 @@ def main(argv=None):
     ap.add_argument("--kset", type=int, default=2, help="cases per device per round")
     ap.add_argument("--method", default="proposed2")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
+                    help="kernel dispatch (repro.fem.backend)")
+    ap.add_argument("--ebe-backend", default="",
+                    help="override the EBE kernel backend only")
+    ap.add_argument("--ms-backend", default="",
+                    help="override the multispring kernel backend only")
+    ap.add_argument("--tile-e", type=int, default=512,
+                    help="Pallas EBE kernel elements per tile")
+    ap.add_argument("--tile-p", type=int, default=256,
+                    help="Pallas multispring kernel points per tile")
+    ap.add_argument("--warm-start", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="warm-start each step's CG from the previous δu")
+    ap.add_argument("--precond-every", type=int, default=1,
+                    help="refresh the EBE preconditioner every N steps")
+    ap.add_argument("--calibration", default=None,
+                    help="BENCH_kernels.json feeding the --autotune cost model")
     ap.add_argument("--scenario", default=None,
                     help="named catalog scenario (repro.scenario.CATALOG)")
     ap.add_argument("--sweep", default=None,
@@ -153,14 +188,18 @@ def main(argv=None):
           + (f" across {np_} processes" if np_ > 1 else ""))
 
     from repro.campaign import CampaignConfig, run_campaign
-    from repro.fem import meshgen
+    from repro.fem import backend as fem_backend, meshgen
     from repro.surrogate.dataset import random_band_limited_waves, simulation_config
 
+    sim = simulation_config(cfg, **_sim_knobs(args))
+    kb = fem_backend.resolve(sim)
+    print(f"{tag} kernel backend: {kb.describe()} "
+          f"warm_start={sim.warm_start} precond_every={sim.precond_every}")
     mesh = meshgen.generate(*cfg.mesh_n, pad_elems_to=8)
     waves = random_band_limited_waves(cfg)
     obs = mesh.surface[len(mesh.surface) // 2 : len(mesh.surface) // 2 + 1]
     res = run_campaign(
-        mesh, simulation_config(cfg), waves, observe=obs,
+        mesh, sim, waves, observe=obs,
         campaign=CampaignConfig(
             kset=args.kset, method=args.method, seed=args.seed,
             checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
@@ -191,6 +230,15 @@ def main(argv=None):
     return 0
 
 
+def _sim_knobs(args) -> dict:
+    """CLI kernel-backend + solver-amortization flags → SeismicConfig fields."""
+    return dict(
+        backend=args.kernel_backend, ebe_backend=args.ebe_backend,
+        ms_backend=args.ms_backend, tile_e=args.tile_e, tile_p=args.tile_p,
+        warm_start=args.warm_start, precond_every=args.precond_every,
+    )
+
+
 def _run_scenarios(args, tag, np_, dmesh) -> int:
     """--scenario / --sweep: plan + run compile-grouped scenario campaigns."""
     import dataclasses
@@ -214,12 +262,21 @@ def _run_scenarios(args, tag, np_, dmesh) -> int:
             nspring=args.nspring,
         )
         plan = sc.make_plan([scn])
+    from repro.fem import backend as fem_backend
+
+    kb = fem_backend.resolve(backend=args.kernel_backend,
+                             ebe=args.ebe_backend or None,
+                             multispring=args.ms_backend or None,
+                             tile_e=args.tile_e, tile_p=args.tile_p)
     print(f"{tag} plan: {plan.n_scenarios} scenario(s) in {len(plan.groups)} "
           f"compile group(s), {plan.n_cases} case(s)"
           + (" [autotune]" if args.autotune else f" method={args.method}"))
+    print(f"{tag} kernel backend: {kb.describe()} "
+          f"warm_start={args.warm_start} precond_every={args.precond_every}")
     run = sc.run_plan(
         plan, autotune=args.autotune, probe=args.probe,
         method=args.method, kset=args.kset,
+        calibration=args.calibration, **_sim_knobs(args),
         device_mesh=dmesh, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         out_dir=args.out, shard_size=args.shard_size,
         stop_after_steps=args.stop_after_steps,

@@ -21,7 +21,12 @@ The model constants below are *ranking* constants — they encode the shape
 of the paper's measured trade-offs (constitutive update is memory-bound
 and k-set-amortizable; CRS pays a per-step assembly the EBE path avoids;
 streaming pays transfers the resident path avoids), not any machine's
-absolute timings.  On-device truth comes from the probe.
+absolute timings.  Passing ``calibration=`` (a
+:class:`repro.core.pipeline.KernelCalibration` or a path to the
+``BENCH_kernels.json`` that ``benchmarks/kernels_bench.py`` measures)
+replaces the constitutive and matvec rates with measured per-backend
+per-unit timings from this machine.  On-device truth still comes from the
+probe.
 """
 from __future__ import annotations
 
@@ -60,6 +65,7 @@ class TuneChoice:
     modeled_case_s: Optional[float] = None
     probed_case_s: Optional[float] = None
     considered: int = 0
+    calibration: Optional[str] = None  # BENCH_kernels.json backend, if used
 
 
 def spring_state_bytes(mesh, cfg) -> int:
@@ -76,12 +82,16 @@ def candidate_nparts(npts: int, cap: int = 8) -> list[int]:
 
 
 def _model_scores(mesh, cfg, *, n_cases, n_devices, methods, kset_cap,
-                  npart_cap, link_gbps, device_budget_bytes):
+                  npart_cap, link_gbps, device_budget_bytes, calibration=None):
     """Yield ``(per_case_s, method, npart, kset)`` for every feasible combo."""
     npts = mesh.n_elem * quad.NPOINT
     state_bytes = spring_state_bytes(mesh, cfg)
-    ms_s = npts * cfg.nspring * MS_FLOPS_PER_SPRING / MODEL_FLOPS
-    matvec_s = mesh.n_elem * MATVEC_FLOPS_PER_ELEM / MODEL_FLOPS
+    if calibration is not None:
+        ms_s = calibration.multispring_s(npts, cfg.nspring)
+        matvec_s = calibration.ebe_matvec_s(mesh.n_elem)
+    else:
+        ms_s = npts * cfg.nspring * MS_FLOPS_PER_SPRING / MODEL_FLOPS
+        matvec_s = mesh.n_elem * MATVEC_FLOPS_PER_ELEM / MODEL_FLOPS
     solve_crs_s = SOLVER_ITERS * matvec_s + CRS_ASSEMBLY_FACTOR * matvec_s
     solve_ebe_s = SOLVER_ITERS * EBE_PRECOND_ITERS * EBE_MATVEC_FACTOR * matvec_s
     kmax = max(1, min(kset_cap, math.ceil(n_cases / max(1, n_devices))))
@@ -157,7 +167,9 @@ def _probe_case_s(mesh, cfg, method, npart, kset, waves, obs, *, steps, reps=2):
     from repro.fem import methods
 
     cfg = _dc.replace(cfg, npart=npart)
-    ops = methods.FemOperators(mesh, cfg)
+    from repro.fem import backend as fem_backend
+
+    ops = fem_backend.make_operators(mesh, cfg)
     chunk_fn, carry0 = make_campaign_chunk(ops, method, obs)
     carry0_b = broadcast_kset(carry0, kset)
     padded, _ = pad_kset(np.asarray(waves)[:kset, :steps], kset)
@@ -185,20 +197,27 @@ def choose(
     probe_steps: int = 2,
     waves: Optional[np.ndarray] = None,
     obs: Optional[np.ndarray] = None,
+    calibration=None,
 ) -> TuneChoice:
     """Pick ``(method, npart, kset)`` for one plan group.
 
     Rank every feasible candidate with the cost model; with ``probe=True``
     (requires ``waves`` and ``obs``) the ``probe_top`` best-modeled
     candidates are additionally timed on device and the measured winner is
-    returned.  Raises if no candidate fits the memory budget (then the
+    returned.  ``calibration`` — a :class:`repro.core.pipeline.
+    KernelCalibration` or a ``BENCH_kernels.json`` path (missing file →
+    constants) — replaces the hard-coded kernel rates with this machine's
+    measured ones.  Raises if no candidate fits the memory budget (then the
     budget, not the tuner, is the problem to fix).
     """
+    if isinstance(calibration, str):
+        calibration = pipeline.load_kernel_calibration(calibration)
+    cal_tag = calibration.backend if calibration is not None else None
     scored = sorted(
         _model_scores(
             mesh, cfg, n_cases=n_cases, n_devices=n_devices, methods=methods,
             kset_cap=kset_cap, npart_cap=npart_cap, link_gbps=link_gbps,
-            device_budget_bytes=device_gb * 1e9,
+            device_budget_bytes=device_gb * 1e9, calibration=calibration,
         ),
         key=lambda c: (c[0], c[1], c[2], c[3]),
     )
@@ -210,7 +229,8 @@ def choose(
     if not probe:
         s, m, p, k = scored[0]
         return TuneChoice(method=m, npart=p, kset=k, source="model",
-                          modeled_case_s=s, considered=len(scored))
+                          modeled_case_s=s, considered=len(scored),
+                          calibration=cal_tag)
     if waves is None or obs is None:
         raise ValueError("probe=True needs the group's waves and obs arrays")
     best = None
@@ -221,4 +241,4 @@ def choose(
     measured, s, m, p, k = best
     return TuneChoice(method=m, npart=p, kset=k, source="probe",
                       modeled_case_s=s, probed_case_s=measured,
-                      considered=len(scored))
+                      considered=len(scored), calibration=cal_tag)

@@ -319,11 +319,16 @@ class Scenario:
             *self.mesh_n, materials=self.soil.materials(), pad_elems_to=pad_elems_to
         )
 
-    def sim_config(self, *, npart: int = 2, tol: float = 1e-6, maxiter: int = 400):
+    def sim_config(self, *, npart: int = 2, tol: float = 1e-6, maxiter: int = 400,
+                   **knobs):
+        """Extra ``knobs`` pass straight to :class:`~repro.fem.methods.
+        SeismicConfig` — kernel backend (``backend``/``tile_e``/``tile_p``)
+        and solver amortization (``warm_start``/``precond_every``)."""
         from repro.fem import methods
 
         return methods.SeismicConfig(
-            dt=self.dt, tol=tol, maxiter=maxiter, npart=npart, nspring=self.nspring
+            dt=self.dt, tol=tol, maxiter=maxiter, npart=npart,
+            nspring=self.nspring, **knobs
         )
 
 

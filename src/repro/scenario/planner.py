@@ -315,6 +315,14 @@ def run_plan(
     kset: int = 2,
     tol: float = 1e-6,
     maxiter: int = 400,
+    backend: str = "auto",
+    ebe_backend: str = "",
+    ms_backend: str = "",
+    tile_e: int = 512,
+    tile_p: int = 256,
+    warm_start: bool = False,
+    precond_every: int = 1,
+    calibration=None,
     device_mesh=None,
     ckpt_dir: Optional[str] = None,
     ckpt_every: int = 0,
@@ -326,8 +334,16 @@ def run_plan(
     """Execute every plan group as one compiled campaign.
 
     ``autotune=True`` asks :func:`repro.scenario.autotune.choose` for the
-    per-group ``(method, npart, kset)`` (cost-model ranking; ``probe=True``
-    additionally times shortlisted candidates on device).  Checkpoints land
+    per-group ``(method, npart, kset)`` (cost-model ranking — calibrated by
+    ``calibration``, a ``BENCH_kernels.json`` path or
+    :class:`~repro.core.pipeline.KernelCalibration`, when given;
+    ``probe=True`` additionally times shortlisted candidates on device).
+    ``backend`` (with the ``ebe_backend``/``ms_backend`` per-kernel
+    overrides and ``tile_e``/``tile_p`` Pallas tiles) selects the kernel
+    backend every group's campaign resolves through
+    (:mod:`repro.fem.backend`), and ``warm_start``/``precond_every`` are
+    the solver-amortization knobs — all of them are folded into each
+    group's campaign signature.  Checkpoints land
     under ``ckpt_dir/group_<key>/`` and carry the group signature, so a
     sweep killed mid-group resumes exactly — and refuses a changed sweep.
     Dataset shards (observation point 0, the surrogate trainer's format) go
@@ -353,6 +369,9 @@ def run_plan(
     results: dict[str, ScenarioResult] = {}
     stats: dict[str, dict] = {}
     n_devices = int(device_mesh.devices.size) if device_mesh is not None else 1
+    knobs = dict(backend=backend, ebe_backend=ebe_backend, ms_backend=ms_backend,
+                 tile_e=tile_e, tile_p=tile_p,
+                 warm_start=warm_start, precond_every=precond_every)
     for gi, group in enumerate(plan.groups):
         ref = group.scenarios[0]
         mesh = ref.build_mesh()
@@ -362,14 +381,14 @@ def run_plan(
             group.choice = prior[group.signature()]
         elif autotune:
             group.choice = _autotune.choose(
-                mesh, ref.sim_config(npart=npart, tol=tol, maxiter=maxiter),
+                mesh, ref.sim_config(npart=npart, tol=tol, maxiter=maxiter, **knobs),
                 n_cases=group.n_cases, n_devices=n_devices, probe=probe,
-                obs=obs, waves=waves,
+                obs=obs, waves=waves, calibration=calibration,
             )
         else:
             group.choice = _autotune.TuneChoice(method=method, npart=npart, kset=kset)
         ch = group.choice
-        sim = ref.sim_config(npart=ch.npart, tol=tol, maxiter=maxiter)
+        sim = ref.sim_config(npart=ch.npart, tol=tol, maxiter=maxiter, **knobs)
         log(f"group {gi + 1}/{len(plan.groups)} [{group.key[:8]}]: "
             f"{len(group.scenarios)} scenario(s), {group.n_cases} case(s), "
             f"method={ch.method} npart={ch.npart} kset={ch.kset} ({ch.source})")

@@ -55,11 +55,15 @@ def random_band_limited_waves(cfg: EnsembleConfig) -> np.ndarray:
     return spec.synthesize(cfg.n_waves, cfg.nt, cfg.dt, cfg.seed)
 
 
-def simulation_config(cfg: EnsembleConfig) -> methods.SeismicConfig:
-    return methods.SeismicConfig(
+def simulation_config(cfg: EnsembleConfig, **overrides) -> methods.SeismicConfig:
+    """``overrides`` pass straight to :class:`~repro.fem.methods.
+    SeismicConfig` — the CLI threads its kernel-backend and solver-
+    amortization flags through here."""
+    base = methods.SeismicConfig(
         dt=cfg.dt, tol=1e-6, maxiter=400, npart=2, nspring=cfg.nspring,
         dtype=jnp.float64 if jnp.zeros(()).dtype == jnp.float64 else jnp.float32,
     )
+    return dataclasses.replace(base, **overrides) if overrides else base
 
 
 def generate(
