@@ -1,4 +1,15 @@
-"""Roofline analysis per (arch × shape × mesh) from the dry-run artifacts.
+"""Roofline analysis: FEM campaign kernels + (arch × shape × mesh) dry-runs.
+
+Two sections:
+
+* **FEM** — always runnable: operators are constructed through the
+  production path (``fem/backend.make_operators``, which resolves the
+  kernel backend exactly as a campaign would — this file predated the
+  backend layer and used to hand-build operators) and the three hot-path
+  kernels (EBE matvec per CG iteration, multispring constitutive update
+  per step, block-Jacobi apply) get *analytic* FLOP/byte counts from the
+  mesh sizes, placing each against the compute and HBM roofs.
+* **LLM dry-run** — from ``reports/dryrun`` artifacts when present.
 
 Terms (TPU v5e targets): compute = FLOPs/(chips·197 TF/s bf16),
 memory = HBM bytes/(chips·819 GB/s), collective = per-chip collective
@@ -214,8 +225,102 @@ def all_rooflines() -> list[Roofline]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# FEM kernels (operators via the production fem/backend path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FemRoofline:
+    mesh_n: tuple
+    kernel: str
+    backend: str
+    flops: float              # analytic, per invocation
+    bytes_hbm: float          # analytic HBM traffic, per invocation
+    intensity: float          # FLOP/byte
+    compute_us: float
+    memory_us: float
+    dominant: str
+
+    def row(self):
+        mesh = "x".join(map(str, self.mesh_n))
+        return (f"{mesh:8s} {self.kernel:12s} {self.backend:18s} "
+                f"{self.flops/1e6:8.2f} {self.bytes_hbm/2**20:8.2f} "
+                f"{self.intensity:7.2f} {self.compute_us:8.3f} "
+                f"{self.memory_us:8.3f} {self.dominant:8s}")
+
+
+def fem_rooflines(mesh_ns=((2, 2, 2), (3, 3, 3)), nspring: int = 12):
+    """Analytic rooflines for the campaign hot-path kernels.
+
+    The counts are per *single case*: one EBE matvec (per CG iteration),
+    one multispring constitutive sweep (per time step), one block-Jacobi
+    apply (per CG iteration) — formulas in line, from the tet10 shapes
+    (NNODE=10 → 30 element DOFs, NPOINT quadrature points, 6 Voigt strain
+    components, 3×3 Jacobian per point, 3×3 BSR blocks)."""
+    from repro.fem import backend as fem_backend, meshgen, methods
+    from repro.fem import quadrature as quad
+
+    import numpy as np
+
+    out = []
+    for mesh_n in mesh_ns:
+        mesh = meshgen.generate(*mesh_n, pad_elems_to=8)
+        cfg = methods.SeismicConfig(nspring=nspring)
+        ops = fem_backend.make_operators(mesh, cfg)
+        kb = ops.kernel_backend.describe()
+        E, P, nnzb = mesh.n_elem, quad.NPOINT, ops.nnzb
+        w = np.dtype(cfg.rdtype).itemsize
+        # EBE matvec: strain B·u (2·6·30 per point), stress D·ε (2·6·6),
+        # force Bᵀ·σ (2·6·30), + gather/scatter adds (2·30 per element)
+        kernels = {
+            "ebe_matvec": (
+                E * (P * (2 * 6 * 30 + 2 * 6 * 6 + 2 * 6 * 30) + 2 * 30),
+                # u gather + f scatter (read+write) + per-point geometry
+                E * ((30 + 2 * 30) * w + P * (9 + 1) * w),
+            ),
+            # multispring: per point × spring, project ε on the direction
+            # (2·6), advance the hysteretic spring (~10), accumulate σ (2·6)
+            "multispring": (
+                E * P * nspring * (2 * 6 + 10 + 2 * 6),
+                # spring state read+write + strain in / stress out per point
+                E * P * (nspring * 2 * w + (6 + 6) * w),
+            ),
+            # block-Jacobi apply: one 3×3 block matvec per stored block
+            "bjacobi": (nnzb * 2 * 9, nnzb * (9 + 3 + 3) * w),
+        }
+        for name, (fl, by) in kernels.items():
+            c_us = fl / PEAK_FLOPS * 1e6
+            m_us = by / HBM_BPS * 1e6
+            out.append(FemRoofline(
+                mesh_n=tuple(mesh_n), kernel=name, backend=kb,
+                flops=float(fl), bytes_hbm=float(by),
+                intensity=fl / max(by, 1.0),
+                compute_us=c_us, memory_us=m_us,
+                dominant="compute" if c_us >= m_us else "memory",
+            ))
+    return out
+
+
+def fem_main(mesh_ns=((2, 2, 2), (3, 3, 3))):
+    rows = fem_rooflines(mesh_ns)
+    hdr = (f"{'mesh':8s} {'kernel':12s} {'backend':18s} {'MFLOP':>8s} "
+           f"{'MiB':>8s} {'F/B':>7s} {'comp_us':>8s} {'mem_us':>8s} "
+           f"{'dominant':8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for rl in rows:
+        print(rl.row())
+    return rows
+
+
 def main():
+    print("== FEM campaign kernels (analytic, ops via fem/backend) ==")
+    fem_main()
+    print("\n== LLM dry-run artifacts ==")
     rows = all_rooflines()
+    if not rows:
+        print("(no reports/dryrun artifacts — run the dry-run sweep first)")
     hdr = (f"{'arch':17s} {'shape':11s} {'mesh':8s} {'comp_ms':>9s} {'mem_ms':>9s} "
            f"{'coll_ms':>9s} {'dominant':10s} {'useful':>6s} {'tempGiB':>7s}")
     print(hdr)

@@ -53,6 +53,15 @@ def main() -> None:
     scenario_bench.main(["--smoke", "--out", os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scenario.json")])
 
+    print("\n== Elastic scheduler: queue vs serial + train-while-generating ==")
+    from benchmarks import scheduler_bench
+
+    # full fidelity on purpose (like kernels above): the committed
+    # BENCH_scheduler.json must show real group runtimes dominating worker
+    # startup — smoke sizes measure process spawn, not the scheduler
+    scheduler_bench.main(["--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_scheduler.json")])
+
     print("\n== Roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline
 

@@ -18,6 +18,17 @@ Scenario sweeps (``repro.scenario``)::
         [--autotune [--probe]] [--out shards/] [--ckpt-dir DIR]
     PYTHONPATH=src python -m repro.launch.campaign --scenario ricker-soft-basin
 
+Scheduled (elastic) sweeps — plan groups become leased jobs on disk; workers
+join/leave freely and the surrogate can train on shards mid-sweep::
+
+    PYTHONPATH=src python -m repro.launch.campaign --sweep sweep.json \
+        --schedule --workers 2 --out shards/ --ckpt-dir DIR \
+        [--lease-s 30] [--train-while-generating]
+    # or manage workers yourself (same queue, any time, any machine
+    # sharing the filesystem):
+    PYTHONPATH=src python -m repro.launch.campaign --sweep sweep.json \
+        --schedule --worker-id w0 --out shards/ --ckpt-dir DIR
+
 Flags
 -----
 ``--waves / --nt / --mesh-n / --nspring / --seed``
@@ -33,6 +44,24 @@ Flags
     compiled campaign.  Writes a ``plan.json`` manifest next to the
     checkpoint dir (or into ``--out``), and per-scenario shard dirs under
     ``--out/<scenario>/``.  Single-process only.
+``--schedule / --workers / --lease-s``
+    Run the sweep through the elastic work queue
+    (``repro.scenario.scheduler``) instead of the serial planner loop:
+    compile groups become leased jobs next to ``plan.json``, ``--workers N``
+    spawns N worker subprocesses (monitored by the heartbeat watchdog —
+    stragglers are flagged before their ``--lease-s`` lease even expires),
+    a killed worker's group is requeued by lease takeover and resumed from
+    its checkpoint by any survivor.  ``--worker-id NAME`` instead joins the
+    queue as a single in-process worker (launch as many as you like,
+    whenever you like); ``--max-jobs`` caps how many groups such a worker
+    takes before leaving.
+``--train-while-generating [--train-steps N]``
+    Overlap surrogate training with generation: the parent streams
+    committed scenario shards out of ``--out`` in plan order
+    (``ShardStream``) and runs ``fit_stream`` while the workers are still
+    producing — deterministic batches regardless of worker count or shard
+    arrival, so the result equals a post-hoc ``fit_shards`` on the
+    finished dataset.
 ``--autotune / --probe``
     Pick ``(method, npart, kset)`` per plan group with the cost model
     (``--autotune``); ``--probe`` additionally times the shortlisted
@@ -84,6 +113,7 @@ Flags
     point would leave the directory.
 """
 import argparse
+import os
 import sys
 
 from repro.launch.bootstrap import force_host_devices, parse_distributed
@@ -130,6 +160,23 @@ def main(argv=None):
                     help="pick (method, npart, kset) per plan group")
     ap.add_argument("--probe", action="store_true",
                     help="with --autotune: on-device microbenchmark probe")
+    ap.add_argument("--schedule", action="store_true",
+                    help="run the sweep through the elastic work queue")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="with --schedule: spawn N monitored worker "
+                         "subprocesses (0/1 = single worker)")
+    ap.add_argument("--lease-s", type=float, default=30.0,
+                    help="job lease lifetime; an expired lease is requeued")
+    ap.add_argument("--worker-id", default=None,
+                    help="with --schedule: join the queue as this single "
+                         "worker (user-managed pool)")
+    ap.add_argument("--max-jobs", type=int, default=0,
+                    help="with --worker-id: leave after completing N groups")
+    ap.add_argument("--train-while-generating", action="store_true",
+                    help="overlap fit_stream with generation (needs --out)")
+    ap.add_argument("--train-steps", type=int, default=120,
+                    help="fit_stream optimizer steps for "
+                         "--train-while-generating")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="devices on the case axis (default: all visible)")
@@ -273,6 +320,8 @@ def _run_scenarios(args, tag, np_, dmesh) -> int:
           + (" [autotune]" if args.autotune else f" method={args.method}"))
     print(f"{tag} kernel backend: {kb.describe()} "
           f"warm_start={args.warm_start} precond_every={args.precond_every}")
+    if args.schedule:
+        return _run_scheduled(args, tag, plan, dmesh)
     run = sc.run_plan(
         plan, autotune=args.autotune, probe=args.probe,
         method=args.method, kset=args.kset,
@@ -294,6 +343,151 @@ def _run_scenarios(args, tag, np_, dmesh) -> int:
     if run.manifest_path:
         print(f"{tag} [plan] manifest → {run.manifest_path}")
     return 0
+
+
+def _group_knobs(args) -> dict:
+    """CLI flags → ``run_worker``/``run_plan`` group-execution keywords."""
+    return dict(
+        autotune=args.autotune, probe=args.probe,
+        method=args.method, kset=args.kset, calibration=args.calibration,
+        ckpt_every=args.ckpt_every, **_sim_knobs(args),
+    )
+
+
+def _worker_cmd(args, worker: str) -> list:
+    """Re-invocation of this CLI as one queue worker child."""
+    cmd = [sys.executable, "-m", "repro.launch.campaign",
+           "--schedule", "--worker-id", worker,
+           "--lease-s", str(args.lease_s),
+           "--waves", str(args.waves), "--nt", str(args.nt),
+           "--mesh-n", args.mesh_n, "--nspring", str(args.nspring),
+           "--seed", str(args.seed), "--kset", str(args.kset),
+           "--method", args.method,
+           "--kernel-backend", args.kernel_backend,
+           "--tile-e", str(args.tile_e), "--tile-p", str(args.tile_p),
+           "--precond-every", str(args.precond_every),
+           "--shard-size", str(args.shard_size)]
+    cmd += ["--warm-start"] if args.warm_start else ["--no-warm-start"]
+    for flag, val in (("--sweep", args.sweep), ("--scenario", args.scenario),
+                      ("--ebe-backend", args.ebe_backend),
+                      ("--ms-backend", args.ms_backend),
+                      ("--calibration", args.calibration),
+                      ("--ckpt-dir", args.ckpt_dir), ("--out", args.out)):
+        if val:
+            cmd += [flag, str(val)]
+    if args.ckpt_every:
+        cmd += ["--ckpt-every", str(args.ckpt_every)]
+    for flag, on in (("--autotune", args.autotune), ("--probe", args.probe),
+                     ("--cpu-backend", args.cpu_backend)):
+        if on:
+            cmd.append(flag)
+    if args.host_devices:
+        cmd += ["--host-devices", str(args.host_devices)]
+    if args.devices:
+        cmd += ["--devices", str(args.devices)]
+    return cmd
+
+
+def _run_scheduled(args, tag, plan, dmesh) -> int:
+    """--schedule: the elastic queue path (worker child, or parent pool)."""
+    import subprocess
+    import threading
+    import time as _time
+
+    from repro.scenario import scheduler as sched
+
+    if not (args.ckpt_dir or args.out):
+        raise SystemExit(f"{tag} --schedule needs --ckpt-dir or --out to "
+                         f"host the on-disk queue")
+    cfg = sched.SchedulerConfig(lease_s=args.lease_s)
+
+    if args.worker_id:  # ---- I am one worker of a user-managed pool ----
+        s = sched.run_worker(
+            plan, worker=args.worker_id, scheduler=cfg, device_mesh=dmesh,
+            ckpt_dir=args.ckpt_dir, out_dir=args.out,
+            shard_size=args.shard_size, max_jobs=args.max_jobs,
+            stop_after_steps=args.stop_after_steps,
+            log=lambda m: print(f"{tag} {m}"), **_group_knobs(args),
+        )
+        print(f"{tag} [worker {s.worker}] done={len(s.done)} "
+              f"failed={len(s.failed)} preempted={len(s.preempted)} "
+              f"settled={s.settled}"
+              + (f" DEAD groups: {s.dead}" if s.dead else ""))
+        return 1 if s.dead else 0
+
+    # ---- parent: spawn a monitored worker pool -----------------------------
+    if args.train_while_generating and not args.out:
+        raise SystemExit(f"{tag} --train-while-generating streams shards "
+                         f"from --out; pass --out")
+    n = max(1, args.workers)
+    names = [f"w{i}" for i in range(n)]
+    qdir = sched.queue_dir_for(args.ckpt_dir, args.out)
+    os.makedirs(qdir, exist_ok=True)
+    print(f"{tag} [schedule] {len(plan.groups)} job(s), {n} worker(s), "
+          f"lease {args.lease_s:.0f}s, queue → {qdir}")
+    procs, logs = [], []
+    for w in names:
+        lp = os.path.join(qdir, f"{w}.log")
+        lf = open(lp, "w")
+        procs.append(subprocess.Popen(
+            _worker_cmd(args, w), stdout=lf, stderr=subprocess.STDOUT))
+        logs.append((lp, lf))
+
+    trainer: dict = {}
+
+    def train():
+        from repro.surrogate.dataset import ShardStream
+        from repro.surrogate.model import SurrogateConfig
+        from repro.surrogate.train import fit_stream
+
+        order = [s.name for g in plan.groups for s in g.scenarios]
+        stream = ShardStream.from_cache(args.out, order,
+                                        timeout_s=max(600.0, args.lease_s * 40))
+        try:
+            trainer["params"], trainer["info"] = fit_stream(
+                SurrogateConfig(), stream, steps=args.train_steps)
+        except Exception as e:  # noqa: BLE001 — surface, don't kill the sweep
+            trainer["error"] = f"{type(e).__name__}: {e}"
+
+    tthread = None
+    if args.train_while_generating:
+        tthread = threading.Thread(target=train, daemon=True)
+        tthread.start()
+        print(f"{tag} [schedule] fit_stream training concurrently "
+              f"({args.train_steps} steps)")
+
+    watch = sched.QueueWatch(qdir, names)
+    while any(p.poll() is None for p in procs):
+        _time.sleep(min(2.0, max(0.5, args.lease_s / 3)))
+        rep = watch.poll()
+        if rep and rep.slow_hosts:
+            slow = ", ".join(names[i] for i in rep.slow_hosts)
+            print(f"{tag} [watchdog] straggler(s): {slow} (heartbeat "
+                  f"{rep.worst_s:.1f}s vs median {rep.median_s:.1f}s)")
+    rcs = [p.wait() for p in procs]
+    for _, lf in logs:
+        lf.close()
+    if tthread is not None:
+        tthread.join()
+        if "error" in trainer:
+            print(f"{tag} [train] FAILED: {trainer['error']}")
+        else:
+            info = trainer["info"]
+            print(f"{tag} [train] val MAE {info['val_mae']:.4f} over "
+                  f"{info['n_shards']} shard(s), waited "
+                  f"{info['stream_wait_s']:.1f}s on generation")
+
+    q = sched.JobQueue(qdir, cfg)
+    dead = [g.key for g in plan.groups if q.state(g.key) == "dead"]
+    ok = q.settled(plan) and not dead and not any(rcs)
+    for w, rc, (lp, _) in zip(names, rcs, logs):
+        if rc:
+            print(f"{tag} [schedule] worker {w} exited rc={rc} — see {lp}")
+    if dead:
+        print(f"{tag} [schedule] DEAD group(s) after retries: {dead}")
+    print(f"{tag} [schedule] {'plan settled' if ok else 'plan NOT settled'}; "
+          f"manifest → {os.path.join(args.ckpt_dir or args.out, 'plan.json')}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

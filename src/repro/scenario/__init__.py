@@ -6,12 +6,18 @@
               group-by-group campaign execution.
 ``autotune``  per-group ``(method, npart, kset)`` via the pipeline cost
               model + optional on-device probe.
+``scheduler`` elastic on-disk work queue over plan groups: leased jobs,
+              expired-lease takeover, bounded retry, heartbeat watchdog.
 """
 from repro.scenario.catalog import (  # noqa: F401
     CATALOG, ObsSpec, Scenario, SoilSpec, WAVE_FAMILIES, WaveSpec, get,
 )
 from repro.scenario.planner import (  # noqa: F401
     Plan, PlanGroup, PlanRunResult, ScenarioResult, SweepSpec, expand,
-    make_plan, manifest, run_plan, sweep_from_json, write_manifest,
+    make_plan, manifest, run_group, run_plan, sweep_from_json, write_manifest,
 )
 from repro.scenario.autotune import TuneChoice, choose  # noqa: F401
+from repro.scenario.scheduler import (  # noqa: F401
+    JobQueue, LeaseLost, QueueWatch, SchedulerConfig, WorkerSummary,
+    queue_dir_for, run_worker,
+)

@@ -305,8 +305,8 @@ class PlanRunResult:
     manifest_path: Optional[str] = None
 
 
-def run_plan(
-    plan: Plan,
+def run_group(
+    group: PlanGroup,
     *,
     autotune: bool = False,
     probe: bool = False,
@@ -329,31 +329,116 @@ def run_plan(
     out_dir: Optional[str] = None,
     shard_size: int = 16,
     stop_after_steps: Optional[int] = None,
+    prior: Optional[dict] = None,
     log=None,
-) -> PlanRunResult:
-    """Execute every plan group as one compiled campaign.
+    label: str = "",
+) -> tuple[dict[str, ScenarioResult], dict]:
+    """Execute ONE plan group as a compiled campaign → (results, stats).
 
-    ``autotune=True`` asks :func:`repro.scenario.autotune.choose` for the
-    per-group ``(method, npart, kset)`` (cost-model ranking — calibrated by
-    ``calibration``, a ``BENCH_kernels.json`` path or
-    :class:`~repro.core.pipeline.KernelCalibration`, when given;
-    ``probe=True`` additionally times shortlisted candidates on device).
-    ``backend`` (with the ``ebe_backend``/``ms_backend`` per-kernel
-    overrides and ``tile_e``/``tile_p`` Pallas tiles) selects the kernel
-    backend every group's campaign resolves through
-    (:mod:`repro.fem.backend`), and ``warm_start``/``precond_every`` are
-    the solver-amortization knobs — all of them are folded into each
-    group's campaign signature.  Checkpoints land
-    under ``ckpt_dir/group_<key>/`` and carry the group signature, so a
-    sweep killed mid-group resumes exactly — and refuses a changed sweep.
-    Dataset shards (observation point 0, the surrogate trainer's format) go
-    to ``out_dir/<scenario name>/``; the full multi-observation responses
-    stay on the returned :class:`ScenarioResult`.  The plan manifest is
-    written next to the checkpoints (or shards) after every group completes.
+    The unit of work both :func:`run_plan` (serial) and the elastic queue
+    (:func:`repro.scenario.scheduler.run_worker`) execute — any process
+    holding the group's lease produces the identical campaign: the tuned
+    choice comes from ``prior`` (keyed by group signature) when recorded,
+    checkpoints land under ``ckpt_dir/group_<key>/`` carrying the group
+    signature (kill-and-resume is exact; a changed sweep is refused), and
+    shards land in ``out_dir/<scenario>/`` committed atomically by
+    ``save_shards``.  ``stats["completed"]`` is False when
+    ``stop_after_steps`` checkpoint-stopped the campaign mid-group.
     """
     from repro.campaign import CampaignConfig, run_campaign
     from repro.scenario import autotune as _autotune
 
+    log = log or (lambda msg: None)
+    prior = prior or {}
+    n_devices = int(device_mesh.devices.size) if device_mesh is not None else 1
+    knobs = dict(backend=backend, ebe_backend=ebe_backend, ms_backend=ms_backend,
+                 tile_e=tile_e, tile_p=tile_p,
+                 warm_start=warm_start, precond_every=precond_every)
+    ref = group.scenarios[0]
+    mesh = ref.build_mesh()
+    waves = np.concatenate([s.waves() for s in group.scenarios], axis=0)
+    obs = ref.obs.indices(mesh)
+    if autotune and group.signature() in prior:
+        group.choice = prior[group.signature()]
+    elif autotune:
+        group.choice = _autotune.choose(
+            mesh, ref.sim_config(npart=npart, tol=tol, maxiter=maxiter, **knobs),
+            n_cases=group.n_cases, n_devices=n_devices, probe=probe,
+            obs=obs, waves=waves, calibration=calibration,
+        )
+    elif group.choice is None:
+        group.choice = _autotune.TuneChoice(method=method, npart=npart, kset=kset)
+    ch = group.choice
+    sim = ref.sim_config(npart=ch.npart, tol=tol, maxiter=maxiter, **knobs)
+    log(f"{label or 'group'} [{group.key[:8]}]: "
+        f"{len(group.scenarios)} scenario(s), {group.n_cases} case(s), "
+        f"method={ch.method} npart={ch.npart} kset={ch.kset} ({ch.source})")
+    cc = CampaignConfig(
+        kset=ch.kset, method=ch.method, seed=ref.seed,
+        checkpoint_dir=os.path.join(ckpt_dir, f"group_{group.key}") if ckpt_dir else None,
+        checkpoint_every=ckpt_every,
+        scenario_sig=group.signature(),
+    )
+    t0 = time.perf_counter()
+    res = run_campaign(
+        mesh, sim, waves, observe=obs, campaign=cc, device_mesh=device_mesh,
+        stop_after_steps=stop_after_steps,
+    )
+    wall_s = time.perf_counter() - t0
+    stats = {
+        "completed": bool(res.completed),
+        "wall_s": wall_s,
+        "cases_per_s": len(res.case_indices) / wall_s if wall_s > 0 else 0.0,
+        "mean_iters": float(res.iters.mean()) if res.iters.size else 0.0,
+    }
+    if not res.completed:
+        log(f"{label or 'group'} [{group.key[:8]}]: stopped after "
+            f"{res.steps_done} steps — relaunch to resume")
+        return {}, stats
+    results: dict[str, ScenarioResult] = {}
+    for s, (lo, hi) in zip(group.scenarios, group.case_slices()):
+        local = (res.case_indices >= lo) & (res.case_indices < hi)
+        sr = ScenarioResult(
+            scenario=s,
+            waves=waves[res.case_indices[local]],
+            responses=np.asarray(res.velocity_history[local]),
+        )
+        if out_dir:
+            from repro.surrogate.dataset import save_shards
+
+            sr.shard_dir = os.path.join(out_dir, s.name)
+            save_shards(
+                sr.shard_dir,
+                sr.waves.astype(np.float32),
+                sr.responses[:, :, 0, :].astype(np.float32),
+                shard_size=shard_size,
+            )
+        results[s.name] = sr
+    return results, stats
+
+
+def run_plan(
+    plan: Plan,
+    *,
+    device_mesh=None,
+    ckpt_dir: Optional[str] = None,
+    out_dir: Optional[str] = None,
+    log=None,
+    **group_kw,
+) -> PlanRunResult:
+    """Execute every plan group serially, one compiled campaign each.
+
+    Thin driver over :func:`run_group` (see there for the knobs — autotune,
+    kernel backends, solver amortization, checkpointing, shard output; all
+    keywords forward).  A group whose campaign *raises* no longer aborts
+    the whole plan: its manifest entry records ``failed: true`` with the
+    error and the remaining groups still run — the elastic scheduler's
+    retry (:mod:`repro.scenario.scheduler`) consumes that record as a spent
+    attempt.  A group that checkpoint-*stops* (``stop_after_steps``) still
+    ends the run early for later resume, exactly as before.  The plan
+    manifest is written next to the checkpoints (or shards) after every
+    group settles.
+    """
     log = log or (lambda msg: None)
     manifest_path = None
     if ckpt_dir:
@@ -364,76 +449,33 @@ def run_plan(
     # knobs are part of the campaign signature, so a resumed group MUST
     # re-use them — a probe re-run is wall-clock-nondeterministic and a
     # flipped winner would refuse its own checkpoint.
-    prior = _prior_choices(manifest_path) if autotune else {}
+    prior = _prior_choices(manifest_path) if group_kw.get("autotune") else {}
 
     results: dict[str, ScenarioResult] = {}
     stats: dict[str, dict] = {}
-    n_devices = int(device_mesh.devices.size) if device_mesh is not None else 1
-    knobs = dict(backend=backend, ebe_backend=ebe_backend, ms_backend=ms_backend,
-                 tile_e=tile_e, tile_p=tile_p,
-                 warm_start=warm_start, precond_every=precond_every)
     for gi, group in enumerate(plan.groups):
-        ref = group.scenarios[0]
-        mesh = ref.build_mesh()
-        waves = np.concatenate([s.waves() for s in group.scenarios], axis=0)
-        obs = ref.obs.indices(mesh)
-        if autotune and group.signature() in prior:
-            group.choice = prior[group.signature()]
-        elif autotune:
-            group.choice = _autotune.choose(
-                mesh, ref.sim_config(npart=npart, tol=tol, maxiter=maxiter, **knobs),
-                n_cases=group.n_cases, n_devices=n_devices, probe=probe,
-                obs=obs, waves=waves, calibration=calibration,
+        label = f"group {gi + 1}/{len(plan.groups)}"
+        try:
+            group_results, st = run_group(
+                group, device_mesh=device_mesh, ckpt_dir=ckpt_dir,
+                out_dir=out_dir, prior=prior, log=log, label=label, **group_kw,
             )
-        else:
-            group.choice = _autotune.TuneChoice(method=method, npart=npart, kset=kset)
-        ch = group.choice
-        sim = ref.sim_config(npart=ch.npart, tol=tol, maxiter=maxiter, **knobs)
-        log(f"group {gi + 1}/{len(plan.groups)} [{group.key[:8]}]: "
-            f"{len(group.scenarios)} scenario(s), {group.n_cases} case(s), "
-            f"method={ch.method} npart={ch.npart} kset={ch.kset} ({ch.source})")
-        cc = CampaignConfig(
-            kset=ch.kset, method=ch.method, seed=ref.seed,
-            checkpoint_dir=os.path.join(ckpt_dir, f"group_{group.key}") if ckpt_dir else None,
-            checkpoint_every=ckpt_every,
-            scenario_sig=group.signature(),
-        )
-        t0 = time.perf_counter()
-        res = run_campaign(
-            mesh, sim, waves, observe=obs, campaign=cc, device_mesh=device_mesh,
-            stop_after_steps=stop_after_steps,
-        )
-        wall_s = time.perf_counter() - t0
-        stats[group.key] = {
-            "completed": bool(res.completed),
-            "wall_s": wall_s,
-            "cases_per_s": len(res.case_indices) / wall_s if wall_s > 0 else 0.0,
-            "mean_iters": float(res.iters.mean()) if res.iters.size else 0.0,
-        }
-        if not res.completed:
-            log(f"group {gi + 1}: stopped after {res.steps_done} steps — "
-                f"relaunch to resume")
+        except Exception as e:  # noqa: BLE001 — one bad scenario ≠ dead plan
+            stats[group.key] = {
+                "completed": False, "failed": True,
+                "error": f"{type(e).__name__}: {e}",
+            }
+            log(f"{label} [{group.key[:8]}] FAILED ({type(e).__name__}: {e}) "
+                f"— continuing with remaining groups")
+            if manifest_path:
+                write_manifest(plan, manifest_path, stats)
+            continue
+        stats[group.key] = st
+        if not st["completed"]:
             if manifest_path:
                 write_manifest(plan, manifest_path, stats)
             return PlanRunResult(plan, results, stats, manifest_path)
-        for s, (lo, hi) in zip(group.scenarios, group.case_slices()):
-            local = (res.case_indices >= lo) & (res.case_indices < hi)
-            sr = ScenarioResult(
-                scenario=s,
-                waves=waves[res.case_indices[local]],
-                responses=np.asarray(res.velocity_history[local]),
-            )
-            if out_dir:
-                from repro.surrogate.dataset import save_shards
-
-                sr.shard_dir = os.path.join(out_dir, s.name)
-                save_shards(
-                    sr.shard_dir,
-                    sr.waves.astype(np.float32),
-                    sr.responses[:, :, 0, :].astype(np.float32),
-                    shard_size=shard_size,
-                )
-            results[s.name] = sr
+        results.update(group_results)
         if manifest_path:
             write_manifest(plan, manifest_path, stats)
     return PlanRunResult(plan, results, stats, manifest_path)

@@ -16,7 +16,8 @@ import glob
 import json
 import os
 import re
-from typing import Optional
+import time
+from typing import Iterator, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -109,10 +110,20 @@ def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 
 
     Pre-existing ``shard_*.npz`` files are removed first: a rerun with a
     smaller ensemble must not leave stale shards from the previous run to be
-    silently concatenated back in by :func:`load_shards`."""
+    silently concatenated back in by :func:`load_shards`.
+
+    The index manifest lands *last*, via an atomic rename — it is the
+    **commit marker** of the streaming shard cache: a directory without
+    ``index.json`` is in-flight (or torn) and invisible to
+    :func:`committed` / :meth:`ShardStream.from_cache` readers, so a
+    campaign worker can build a scenario's shards in place and publish them
+    with one rename."""
     if len(x) != len(y):
         raise ValueError(f"waves/responses length mismatch: {len(x)} vs {len(y)}")
     os.makedirs(directory, exist_ok=True)
+    index = os.path.join(directory, "index.json")
+    if os.path.exists(index):
+        os.remove(index)  # de-commit before mutating the shard set
     for stale in glob.glob(os.path.join(directory, "shard_*.npz")):
         os.remove(stale)
     paths = []
@@ -120,59 +131,216 @@ def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 
         p = os.path.join(directory, f"shard_{s:05d}.npz")
         np.savez(p, x=x[lo : lo + shard_size], y=y[lo : lo + shard_size])
         paths.append(p)
-    with open(os.path.join(directory, "index.json"), "w") as f:
+    tmp = index + ".tmp"
+    with open(tmp, "w") as f:
         json.dump({"n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths)}, f)
+    os.replace(tmp, index)
     return paths
+
+
+def committed(directory: str) -> bool:
+    """True iff ``directory`` is a committed shard directory (its
+    ``index.json`` commit marker exists)."""
+    return os.path.exists(os.path.join(directory, "index.json"))
 
 
 _PROC_DIR = re.compile(r"^p\d{2,}$")
 
 
-def load_shards(directory: str) -> tuple[np.ndarray, np.ndarray]:
-    """Concatenate every ``shard_*.npz`` in ``directory`` back to (x, y),
-    validated against the index manifest when one is present.
+def shard_paths(directory: str) -> list[str]:
+    """Every shard file under ``directory`` in deterministic order.
 
-    A directory holding no flat shards but ``p00/, p01/, …`` process
-    subdirectories (a multi-host campaign's ``--out`` tree, one subtree per
-    process) is walked in deterministic **(process, shard)** order — sorted
-    process dirs, then sorted shard files within each, every subtree
-    validated against its own index — so multi-host output trains without
-    hand-concatenation.  Flat shards and process dirs must not be mixed.
+    Three layouts, never mixed (ambiguous ordering is refused):
+
+    * **flat** — ``shard_*.npz`` files, sorted, validated against the
+      directory's index manifest when one is present;
+    * **process tree** — ``p00/, p01/, …`` subdirectories (a multi-host
+      campaign's ``--out``), walked in numeric **(process, shard)** order
+      (``p100`` after ``p99``, not after ``p10``);
+    * **scenario cache** — any other subdirectories holding a *committed*
+      shard set (``index.json`` present — e.g. a sweep's
+      ``out/<scenario>/`` dirs), walked in sorted-name order, recursively.
+      Uncommitted subdirectories are an error here: a post-hoc load must
+      not silently skip a scenario that a crashed worker half-wrote.
     """
-    paths = sorted(glob.glob(os.path.join(directory, "shard_*.npz")))
-    pdirs = sorted(
-        (d for d in (os.listdir(directory) if os.path.isdir(directory) else [])
-         if _PROC_DIR.match(d) and os.path.isdir(os.path.join(directory, d))),
-        key=lambda d: int(d[1:]),  # numeric: p100 after p99, not after p10
+    flat = sorted(glob.glob(os.path.join(directory, "shard_*.npz")))
+    subdirs = sorted(
+        d for d in (os.listdir(directory) if os.path.isdir(directory) else [])
+        if os.path.isdir(os.path.join(directory, d))
     )
-    if paths and pdirs:
+    pdirs = sorted((d for d in subdirs if _PROC_DIR.match(d)),
+                   key=lambda d: int(d[1:]))
+    sdirs = [d for d in subdirs if not _PROC_DIR.match(d)
+             and not d.endswith(".tmp")]
+    if flat and (pdirs or sdirs):
         raise ValueError(
-            f"{directory} mixes flat shard_*.npz files with process dirs "
-            f"{pdirs} — ambiguous ordering; keep one layout"
+            f"{directory} mixes flat shard_*.npz files with subdirectories "
+            f"{pdirs + sdirs} — ambiguous ordering; keep one layout"
         )
-    if not paths and pdirs:
-        parts = [load_shards(os.path.join(directory, d)) for d in pdirs]
-        return (np.concatenate([x for x, _ in parts]),
-                np.concatenate([y for _, y in parts]))
-    if not paths:
-        raise FileNotFoundError(f"no dataset shards under {directory}")
-    xs, ys = [], []
-    for p in paths:
-        with np.load(p) as z:
-            xs.append(z["x"])
-            ys.append(z["y"])
+    if pdirs and sdirs:
+        raise ValueError(
+            f"{directory} mixes process dirs {pdirs} with scenario dirs "
+            f"{sdirs} — ambiguous ordering; keep one layout"
+        )
+    if flat:
+        index = os.path.join(directory, "index.json")
+        if os.path.exists(index):
+            with open(index) as f:
+                meta = json.load(f)
+            if meta.get("shards") != len(flat):
+                raise ValueError(
+                    f"shard directory {directory} inconsistent with its index "
+                    f"({len(flat)} shards vs manifest {meta}) — regenerate "
+                    f"with save_shards"
+                )
+        return flat
+    if pdirs:
+        return [p for d in pdirs for p in shard_paths(os.path.join(directory, d))]
+    if sdirs:
+        out = []
+        for d in sdirs:
+            sub = os.path.join(directory, d)
+            if not committed(sub) and not any(
+                os.path.isdir(os.path.join(sub, dd)) for dd in os.listdir(sub)
+            ):
+                raise ValueError(
+                    f"scenario shard directory {sub} was never committed "
+                    f"(no index.json) — a worker died mid-write; rerun the "
+                    f"sweep (or remove the torn directory)"
+                )
+            out.extend(shard_paths(sub))
+        return out
+    raise FileNotFoundError(f"no dataset shards under {directory}")
+
+
+def _load_shard(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with np.load(path) as z:
+        return z["x"], z["y"]
+
+
+def iter_shards(directory: str) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(x, y)`` per shard in :func:`shard_paths` order — the
+    O(one-shard) form of :func:`load_shards`; nothing is concatenated."""
+    for p in shard_paths(directory):
+        yield _load_shard(p)
+
+
+def load_shards(directory: str) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate every shard under ``directory`` back to (x, y).
+
+    Accepts every layout :func:`shard_paths` knows (flat, multi-host
+    ``pNN/`` trees, committed scenario caches) in its deterministic order,
+    validated against each index manifest.  This materializes the whole
+    dataset in host memory — training-sized runs should prefer
+    :func:`iter_shards` / :class:`ShardStream` (what
+    :func:`repro.surrogate.train.fit_shards` now streams through)."""
+    paths = shard_paths(directory)
+    xs, ys = zip(*(_load_shard(p) for p in paths))
     x, y = np.concatenate(xs), np.concatenate(ys)
     index = os.path.join(directory, "index.json")
     if os.path.exists(index):
         with open(index) as f:
             meta = json.load(f)
-        if meta.get("shards") != len(paths) or meta.get("n") != len(x):
+        if meta.get("n") != len(x):
             raise ValueError(
                 f"shard directory {directory} inconsistent with its index "
                 f"({len(paths)} shards / {len(x)} rows vs manifest {meta}) — "
                 f"regenerate with save_shards"
             )
     return x, y
+
+
+# ---------------------------------------------------------------------------
+# streaming shard cache: train while the campaign is still producing
+# ---------------------------------------------------------------------------
+
+
+class ShardStream:
+    """Deterministic, lazily-materialized stream of dataset shards.
+
+    Iterating yields ``(x, y)`` per shard, loading one shard at a time.
+    The *order* is fixed up front — by directory layout
+    (:meth:`from_dir`) or by the caller's scenario order
+    (:meth:`from_cache`) — so the sequence a trainer sees is identical for
+    any (worker count, shard arrival) interleaving; a cache stream merely
+    *blocks* until the next scenario in order has committed.  After a shard
+    has been yielded its path is recorded, so ``stream[i]`` re-loads it
+    from disk later (the trainer's full-dataset phase) without the stream
+    ever holding more than one shard in memory itself.
+
+    ``wait_s`` accumulates the time spent blocked on uncommitted scenarios
+    — the overlap telemetry ``benchmarks/scheduler_bench.py`` reports.
+    """
+
+    def __init__(self, groups, *, poll_s: float = 0.2, timeout_s: float = 600.0):
+        # groups: [(label, dir_or_paths)] — a dir is resolved (and possibly
+        # waited on) at iteration time; a path list is used as-is
+        self._groups = list(groups)
+        self.poll_s = poll_s
+        self.timeout_s = timeout_s
+        self.paths: list[str] = []   # filled (in order) as iteration advances
+        self.wait_s = 0.0
+        self._exhausted = False
+
+    @classmethod
+    def from_dir(cls, directory: str) -> "ShardStream":
+        """Stream over an already-complete shard directory (any
+        :func:`shard_paths` layout); never blocks."""
+        return cls([(directory, shard_paths(directory))])
+
+    @classmethod
+    def from_cache(
+        cls,
+        directory: str,
+        order: Sequence[str],
+        *,
+        poll_s: float = 0.2,
+        timeout_s: float = 600.0,
+    ) -> "ShardStream":
+        """Stream over a cache that campaign workers are still filling.
+
+        ``order`` names the scenario subdirectories (``directory/<name>/``)
+        in the order the trainer must consume them — the plan's scenario
+        order, so every consumer sees the same sequence regardless of which
+        worker commits which scenario when.  Iteration blocks (polling
+        every ``poll_s``) until the next scenario in order is committed;
+        ``timeout_s`` without progress raises rather than hanging on a dead
+        sweep."""
+        return cls([(n, os.path.join(directory, n)) for n in order],
+                   poll_s=poll_s, timeout_s=timeout_s)
+
+    def _resolve(self, label, target) -> list[str]:
+        if isinstance(target, list):
+            return target
+        deadline = time.monotonic() + self.timeout_s
+        t0 = time.monotonic()
+        while not committed(target):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"scenario {label!r} not committed under {target} after "
+                    f"{self.timeout_s:.0f}s — generation died or the order "
+                    f"names a scenario this sweep never produces"
+                )
+            time.sleep(self.poll_s)
+        self.wait_s += time.monotonic() - t0
+        return shard_paths(target)
+
+    def __iter__(self) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        if self._exhausted:  # re-iteration replays the recorded order
+            for p in self.paths:
+                yield _load_shard(p)
+            return
+        for label, target in self._groups:
+            for p in self._resolve(label, target):
+                self.paths.append(p)
+                yield _load_shard(p)
+        self._exhausted = True
+
+    def __getitem__(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        # valid for already-yielded shards only: the stream records paths
+        # as it advances, so the trainer's full-dataset phase can re-load
+        # any consumed shard from disk without the stream holding it
+        return _load_shard(self.paths[i])
 
 
 # ---------------------------------------------------------------------------

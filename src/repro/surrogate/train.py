@@ -26,6 +26,29 @@ SEARCH_SPACE = {
 }
 
 
+def _make_adam(cfg: SurrogateConfig, params):
+    """(step_fn, m0, v0): the jitted Adam+MAE update shared by :func:`fit`
+    and :func:`fit_stream` — identical math, so a streamed run that sees
+    the same batch sequence reproduces the offline run exactly."""
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(mae_loss)(params, cfg, xb, yb)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** (t + 1)), m)
+        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** (t + 1)), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - cfg.lr * mm / (jnp.sqrt(vv) + eps), params, mhat, vhat
+        )
+        return params, m, v, loss
+
+    return step_fn, m, v
+
+
 def fit(
     cfg: SurrogateConfig,
     x: np.ndarray,  # [N,T,3] input waves
@@ -46,21 +69,7 @@ def fit(
     yt, yv = yt / scale, yv / scale
 
     params = init_params(cfg, jax.random.key(seed))
-    m = jax.tree_util.tree_map(jnp.zeros_like, params)
-    v = jax.tree_util.tree_map(jnp.zeros_like, params)
-
-    @jax.jit
-    def step_fn(params, m, v, t, xb, yb):
-        loss, g = jax.value_and_grad(mae_loss)(params, cfg, xb, yb)
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
-        v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
-        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** (t + 1)), m)
-        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** (t + 1)), v)
-        params = jax.tree_util.tree_map(
-            lambda p, mm, vv: p - cfg.lr * mm / (jnp.sqrt(vv) + eps), params, mhat, vhat
-        )
-        return params, m, v, loss
+    step_fn, m, v = _make_adam(cfg, params)
 
     @jax.jit
     def val_loss(params):
@@ -85,19 +94,146 @@ def fit(
     return params, info
 
 
+def fit_stream(
+    cfg: SurrogateConfig,
+    shards,  # ShardStream (or any re-iterable of (x, y) shard pairs)
+    *,
+    steps: int = 200,
+    batch: int = 4,
+    val_shards: int = 1,
+    steps_per_shard: int = 4,
+    window: int = 8,
+    seed: int = 0,
+    verbose: bool = False,
+) -> tuple[Any, dict]:
+    """Train on a shard stream *while it is still being produced*.
+
+    The levanter-style overlap: a scheduled sweep commits scenario shards
+    as groups finish, and the trainer consumes them through a
+    :class:`~repro.surrogate.dataset.ShardStream` instead of waiting for
+    campaign → shards → :func:`fit_shards`.  Two phases, both a pure
+    function of (stream order, ``seed``, ``steps``) and therefore
+    **deterministic for any (worker count, shard arrival) interleaving** —
+    arrival timing only decides how long the stream blocks, never which
+    batch is drawn when:
+
+    1. **streaming** — the first ``val_shards`` shards become the held-out
+       validation block (and the MAE normalization scale; :func:`fit` uses
+       the train split's std, unavailable before the stream ends — a
+       documented deviation).  Each subsequent shard triggers up to
+       ``steps_per_shard`` optimizer steps on batches drawn from a sliding
+       window of the last ``window`` shards, so training tracks generation
+       without ever holding more than ``window`` shards in memory;
+    2. **full-dataset** — once the stream is exhausted, the remaining step
+       budget samples (shard, rows) pairs over the whole dataset, loading
+       one shard from disk per step: peak host memory stays O(shard), the
+       ``fit_shards`` satellite fix.
+
+    Returns ``(params, info)`` with :func:`fit`-compatible ``info`` keys
+    plus ``n_shards`` and ``stream_wait_s`` (time blocked on uncommitted
+    shards — the overlap telemetry the scheduler bench reports).
+    """
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.key(seed))
+    step_fn, m, v = _make_adam(cfg, params)
+
+    t0 = time.time()
+    hist = []
+    t = 0
+    val_xy: list[tuple[np.ndarray, np.ndarray]] = []
+    win: list[tuple[np.ndarray, np.ndarray]] = []
+    scale = 1.0
+    val_loss = None
+
+    def one_step(xb, yb):
+        nonlocal params, m, v, t
+        params, m, v, loss = step_fn(
+            params, m, v, jnp.asarray(t, jnp.float32),
+            jnp.asarray(xb), jnp.asarray(yb) / scale,
+        )
+        if t % 25 == 0 or t == steps - 1:
+            vl = float(val_loss(params))
+            hist.append((t, float(loss), vl))
+            if verbose:
+                print(f"  step {t}: train {float(loss):.4f} val {vl:.4f}")
+        t += 1
+
+    def draw(pool):  # (shard-of-pool, rows) under the single seeded rng
+        xs, ys = pool[int(rng.integers(0, len(pool)))]
+        idx = rng.integers(0, len(xs), size=min(batch, len(xs)))
+        return xs[idx], ys[idx]
+
+    # ---- phase 1: consume the stream as it commits -------------------------
+    n_shards = 0
+    for xk, yk in shards:
+        n_shards += 1
+        if len(val_xy) < val_shards:
+            val_xy.append((xk, yk))
+            if len(val_xy) == val_shards:
+                xv = jnp.asarray(np.concatenate([a for a, _ in val_xy]))
+                yv_raw = np.concatenate([b for _, b in val_xy])
+                scale = float(np.abs(yv_raw).std() + 1e-12)
+                yv = jnp.asarray(yv_raw) / scale
+                val_loss = jax.jit(lambda p: mae_loss(p, cfg, xv, yv))
+            continue
+        win.append((xk, yk))
+        del win[:-window]
+        for _ in range(steps_per_shard):
+            if t >= steps:
+                break  # keep consuming: phase 2 needs the full shard list
+            one_step(*draw(win))
+    if val_loss is None:
+        raise ValueError(
+            f"stream ended after {n_shards} shard(s) — fewer than "
+            f"val_shards={val_shards}; nothing left to train on"
+        )
+    if n_shards == val_shards:
+        raise ValueError(
+            f"stream holds only the {val_shards} validation shard(s) — "
+            f"lower val_shards or generate more data"
+        )
+    win.clear()
+    stream_wait_s = float(getattr(shards, "wait_s", 0.0))
+
+    # ---- phase 2: remaining budget over the full dataset, O(shard) memory --
+    n_train = n_shards - val_shards
+    while t < steps:
+        k = val_shards + int(rng.integers(0, n_train))
+        pair = shards[k] if hasattr(shards, "__getitem__") else None
+        if pair is None:  # plain iterable: fall back to a window-less replay
+            raise TypeError(
+                "fit_stream needs an indexable shard source (ShardStream) "
+                "to run its full-dataset phase"
+            )
+        one_step(*draw([pair]))
+
+    info = {
+        "val_mae": float(val_loss(params)),
+        "history": hist,
+        "train_s": time.time() - t0,
+        "scale": scale,
+        "n_shards": n_shards,
+        "stream_wait_s": stream_wait_s,
+    }
+    return params, info
+
+
 def fit_shards(cfg: SurrogateConfig, shard_dir: str, **kw) -> tuple[Any, dict]:
-    """:func:`fit` on a campaign-written dataset shard directory.
+    """:func:`fit_stream` on a campaign-written dataset shard directory.
 
     The campaign → shards → trainer handoff: generation and training need
     not share a process (the paper's production run generates on the big
     machine, trains elsewhere).  ``shard_dir`` may be a flat shard
-    directory or a multi-host ``OUT/pNN/`` tree — :func:`~repro.surrogate.
-    dataset.load_shards` walks process subtrees in deterministic
-    (process, shard) order, so N-process campaign output trains directly."""
-    from repro.surrogate.dataset import load_shards
+    directory, a multi-host ``OUT/pNN/`` tree, or a sweep's committed
+    scenario cache — :func:`~repro.surrogate.dataset.shard_paths` fixes the
+    deterministic order.  Training streams shard-by-shard through
+    :func:`fit_stream`, so peak host memory is O(shard), not O(dataset) —
+    and a completed directory reproduces *exactly* what
+    :func:`fit_stream` computed live against the in-flight sweep (same
+    order, same seed → same batch sequence)."""
+    from repro.surrogate.dataset import ShardStream
 
-    x, y = load_shards(shard_dir)
-    return fit(cfg, x, y, **kw)
+    return fit_stream(cfg, ShardStream.from_dir(shard_dir), **kw)
 
 
 def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):

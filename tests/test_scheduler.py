@@ -1,0 +1,310 @@
+"""Elastic sweep scheduler: on-disk lease protocol (exclusive claim,
+expiry takeover, bounded retry), failed-group manifest records, the
+kill-and-rejoin ≡ serial determinism contract, streaming train-while-
+generate equivalence, and the heartbeat watchdog."""
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import scenario as sc
+from repro.scenario.catalog import Scenario
+from repro.scenario.scheduler import (
+    JobQueue, LeaseLost, QueueWatch, SchedulerConfig, _beat, run_worker,
+)
+
+
+def _tiny(**kw):
+    kw.setdefault("mesh_n", (2, 2, 2))
+    kw.setdefault("n_cases", 2)
+    kw.setdefault("nt", 6)
+    return Scenario(**kw)
+
+
+# soil axis → one compile group per value; ascending so plan order ==
+# sorted-name order (what ShardStream.from_dir walks)
+_VS_AXIS = ("soil.vs", ((0.8, 1.0), (1.0, 1.0)))
+
+_FAST = SchedulerConfig(lease_s=30.0, poll_s=0.02, backoff_s=0.01)
+
+
+def _plan(**base_kw):
+    return sc.make_plan(sc.SweepSpec(base=_tiny(**base_kw), axes=(_VS_AXIS,)))
+
+
+def _ok_stats():
+    return {"completed": True, "wall_s": 0.01, "cases_per_s": 1.0,
+            "mean_iters": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# lease protocol
+# ---------------------------------------------------------------------------
+
+
+def test_claim_is_exclusive_and_release_requeues(tmp_path):
+    plan = _plan()
+    q = JobQueue.create(str(tmp_path), plan)
+    key = plan.groups[0].key
+    c = q.try_claim(key, "w0")
+    assert c is not None and c.attempt == 1
+    assert q.try_claim(key, "w1") is None          # filesystem arbitration
+    assert q.state(key) == "leased"
+    q.release(key, c.token)
+    assert q.state(key) == "ready"
+    c2 = q.try_claim(key, "w1")
+    assert c2 is not None and c2.token != c.token
+
+
+def test_expired_lease_single_takeover(tmp_path):
+    cfg = SchedulerConfig(lease_s=0.05, backoff_s=0.0)
+    plan = _plan()
+    q = JobQueue.create(str(tmp_path), plan, cfg)
+    key = plan.groups[0].key
+    c0 = q.try_claim(key, "w0")
+    time.sleep(0.1)
+    assert q.state(key) == "expired"
+    c1 = q.try_claim(key, "w1")                    # takeover: tombstone + claim
+    assert c1 is not None and c1.attempt == 2
+    recs = [json.load(open(p)) for p in q.fail_paths(key)]
+    assert recs[0]["kind"] == "expired" and "w0" in recs[0]["error"]
+    with pytest.raises(LeaseLost):                 # the usurped holder notices
+        q.renew(key, c0.token)
+    q.renew(key, c1.token)                         # the usurper's is live
+
+
+def test_retry_backoff_then_dead(tmp_path):
+    cfg = SchedulerConfig(lease_s=30.0, max_attempts=2, backoff_s=0.05)
+    plan = _plan()
+    q = JobQueue.create(str(tmp_path), plan, cfg)
+    key = plan.groups[0].key
+    c = q.try_claim(key, "w0")
+    q.release(key, c.token, fail={"kind": "error", "error": "boom"})
+    assert q.state(key) == "backoff"               # not immediately retryable
+    assert q.try_claim(key, "w0") is None
+    time.sleep(0.08)
+    c2 = q.try_claim(key, "w0")
+    assert c2 is not None and c2.attempt == 2
+    q.release(key, c2.token, fail={"kind": "error", "error": "boom again"})
+    assert q.state(key) == "dead"                  # attempts exhausted
+    assert q.try_claim(key, "w1") is None
+    # a dead job settles the queue (with the other group done)
+    other = plan.groups[1].key
+    co = q.try_claim(other, "w0")
+    q.mark_done(other, co.token, {"key": other, **_ok_stats()})
+    assert q.settled(plan)
+
+
+def test_queue_consumes_run_plan_manifest(tmp_path):
+    """Satellite: a serial run_plan's manifest seeds the queue — completed
+    groups are pre-done, a `failed` record is a spent attempt the
+    scheduler's retry consumes."""
+    plan = _plan()
+    g0, g1 = plan.groups
+    mpath = str(tmp_path / "plan.json")
+    sc.write_manifest(plan, mpath, {
+        g0.key: {"completed": False, "failed": True, "error": "boom"},
+        g1.key: _ok_stats(),
+    })
+    q = JobQueue.create(str(tmp_path / "queue"), plan,
+                        SchedulerConfig(backoff_s=0.0), manifest_path=mpath)
+    assert q.state(g1.key) == "done"
+    assert len(q.fail_paths(g0.key)) == 1
+    c = q.try_claim(g0.key, "w0")
+    assert c is not None and c.attempt == 2
+
+
+def test_worker_retries_failed_group_until_done(tmp_path):
+    """One bad attempt must not sink the plan: the worker requeues the
+    group with backoff, finishes the rest, and retries to completion."""
+    plan = _plan()
+    g0 = plan.groups[0].key
+    calls = {}
+
+    def runner(group, **kw):
+        calls[group.key] = calls.get(group.key, 0) + 1
+        if group.key == g0 and calls[group.key] == 1:
+            raise RuntimeError("transient solver blowup")
+        return {}, _ok_stats()
+
+    s = run_worker(plan, worker="w0", scheduler=_FAST,
+                   ckpt_dir=str(tmp_path / "ck"), _group_runner=runner)
+    assert s.settled and not s.dead
+    assert sorted(s.done) == sorted(g.key for g in plan.groups)
+    assert s.failed == [g0] and calls[g0] == 2
+    q = JobQueue(os.path.join(str(tmp_path / "ck"), "queue"), _FAST)
+    assert len(q.fail_paths(g0)) == 1
+    with open(os.path.join(str(tmp_path / "ck"), "plan.json")) as f:
+        m = json.load(f)
+    assert all(g.get("completed") for g in m["groups"])
+    assert {g["worker"] for g in m["groups"]} == {"w0"}
+
+
+def test_worker_gives_up_after_max_attempts(tmp_path):
+    plan = _plan()
+    bad = plan.groups[0].key
+
+    def runner(group, **kw):
+        if group.key == bad:
+            raise RuntimeError("deterministic failure")
+        return {}, _ok_stats()
+
+    s = run_worker(plan, worker="w0",
+                   scheduler=dataclasses.replace(_FAST, max_attempts=2),
+                   ckpt_dir=str(tmp_path / "ck"), _group_runner=runner)
+    assert s.settled and s.dead == [bad]
+    assert s.done == [plan.groups[1].key]
+    with open(os.path.join(str(tmp_path / "ck"), "plan.json")) as f:
+        m = json.load(f)
+    rec = next(g for g in m["groups"] if g["key"] == bad)
+    assert rec["failed"] and rec["attempts"] == 2
+    assert "deterministic failure" in rec["error"]
+
+
+def test_run_plan_records_failed_group_and_continues(tmp_path, monkeypatch):
+    """Satellite: run_plan no longer aborts the plan when a group raises —
+    the manifest carries a `failed` record and the rest still run."""
+    import repro.scenario.planner as planner
+
+    plan = _plan()
+    bad = plan.groups[0].key
+
+    def runner(group, **kw):
+        if group.key == bad:
+            raise RuntimeError("mesh went singular")
+        name = group.scenarios[0].name
+        sr = planner.ScenarioResult(
+            scenario=group.scenarios[0],
+            waves=np.zeros((1, 4, 3), np.float32),
+            responses=np.zeros((1, 4, 1, 3), np.float32))
+        return {name: sr}, _ok_stats()
+
+    monkeypatch.setattr(planner, "run_group", runner)
+    run = sc.run_plan(plan, ckpt_dir=str(tmp_path / "ck"))
+    assert run.group_stats[bad]["failed"]
+    assert "mesh went singular" in run.group_stats[bad]["error"]
+    assert len(run.scenarios) == 1                  # the healthy group ran
+    with open(run.manifest_path) as f:
+        m = json.load(f)
+    recs = {g["key"]: g for g in m["groups"]}
+    assert recs[bad]["failed"] and recs[plan.groups[1].key]["completed"]
+
+
+# ---------------------------------------------------------------------------
+# kill-and-rejoin determinism (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_kill_rejoin_matches_serial_run_plan(tmp_path):
+    """A worker killed mid-group (checkpoint-stop stand-in) plus a rejoined
+    survivor must produce shard output identical to serial run_plan: same
+    deterministic order, tolerance-equal values."""
+    spec = sc.SweepSpec(base=_tiny(), axes=(_VS_AXIS,))
+    serial_out = str(tmp_path / "serial_out")
+    sc.run_plan(sc.make_plan(spec), ckpt_dir=str(tmp_path / "serial_ck"),
+                ckpt_every=2, out_dir=serial_out, shard_size=1)
+
+    out, ck = str(tmp_path / "out"), str(tmp_path / "ck")
+    # worker 0 checkpoints mid-first-group, requeues it, and leaves — the
+    # deterministic stand-in for SIGKILL
+    w0 = run_worker(sc.make_plan(spec), worker="w0", scheduler=_FAST,
+                    ckpt_dir=ck, ckpt_every=2, out_dir=out, shard_size=1,
+                    stop_after_steps=3)
+    assert w0.preempted and not w0.done and not w0.settled
+    # worker 1 joins later, resumes the preempted group from its checkpoint
+    # and finishes the plan
+    w1 = run_worker(sc.make_plan(spec), worker="w1", scheduler=_FAST,
+                    ckpt_dir=ck, ckpt_every=2, out_dir=out, shard_size=1)
+    assert w1.settled and sorted(w1.done) == \
+        sorted(g.key for g in sc.make_plan(spec).groups)
+
+    from repro.surrogate.dataset import load_shards, shard_paths
+
+    names = [s.name for g in sc.make_plan(spec).groups for s in g.scenarios]
+    assert sorted(os.listdir(out)) == sorted(os.listdir(serial_out)) == sorted(names)
+    for name in names:
+        a, b = os.path.join(serial_out, name), os.path.join(out, name)
+        assert [os.path.basename(p) for p in shard_paths(a)] == \
+            [os.path.basename(p) for p in shard_paths(b)]
+        xa, ya = load_shards(a)
+        xb, yb = load_shards(b)
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_allclose(ya, yb, rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# train-while-generating
+# ---------------------------------------------------------------------------
+
+
+def test_fit_stream_concurrent_matches_posthoc_fit_shards(tmp_path):
+    """fit_stream consuming the cache WHILE a worker generates reaches the
+    same val MAE as post-hoc fit_shards on the finished dataset — batch
+    order is a function of (plan order, seed), never arrival timing."""
+    from repro.surrogate.dataset import ShardStream
+    from repro.surrogate.model import SurrogateConfig
+    from repro.surrogate.train import fit_shards, fit_stream
+
+    spec = sc.SweepSpec(base=_tiny(), axes=(_VS_AXIS,))
+    plan = sc.make_plan(spec)
+    out = str(tmp_path / "out")
+    order = [s.name for g in plan.groups for s in g.scenarios]
+
+    worker = threading.Thread(target=run_worker, args=(plan,), kwargs=dict(
+        worker="w0", scheduler=_FAST, ckpt_dir=str(tmp_path / "ck"),
+        out_dir=out, shard_size=1), daemon=True)
+    worker.start()
+    stream = ShardStream.from_cache(out, order, poll_s=0.05, timeout_s=300.0)
+    cfg = SurrogateConfig()
+    kw = dict(steps=8, batch=2, val_shards=1, seed=0)
+    params_live, live = fit_stream(cfg, stream, **kw)
+    worker.join(timeout=300.0)
+    assert not worker.is_alive()
+    assert live["n_shards"] == 4                    # 2 scenarios × 2 shards
+    assert live["stream_wait_s"] > 0.0              # it really overlapped
+
+    params_post, post = fit_shards(cfg, out, **kw)
+    assert live["val_mae"] == pytest.approx(post["val_mae"], abs=1e-6)
+    assert [h[:1] for h in live["history"]] == [h[:1] for h in post["history"]]
+    np.testing.assert_allclose(np.asarray(params_live["enc"][0]["w"]),
+                               np.asarray(params_post["enc"][0]["w"]),
+                               atol=1e-6)
+
+
+def test_shard_stream_times_out_on_dead_sweep(tmp_path):
+    from repro.surrogate.dataset import ShardStream
+
+    stream = ShardStream.from_cache(str(tmp_path), ["never-arrives"],
+                                    poll_s=0.01, timeout_s=0.05)
+    with pytest.raises(TimeoutError, match="not committed"):
+        list(stream)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat watchdog (StepWatchdog revival)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_watch_flags_silent_worker(tmp_path):
+    qdir = str(tmp_path / "queue")
+    q = JobQueue(qdir)
+    names = ["w0", "w1", "w2", "w3"]
+    for w in names:
+        _beat(q, w, None, 0)
+    watch = QueueWatch(qdir, names, slack=3.0, patience=2)
+    rep = None
+    for _ in range(3):
+        time.sleep(0.12)
+        for w in names[:3]:                        # w3 goes silent
+            _beat(q, w, "job", 0)
+        rep = watch.poll()
+    assert rep is not None and rep.slow_hosts == (3,)
+    _beat(q, names[3], "job", 0)                   # w3 recovers
+    for w in names[:3]:
+        _beat(q, w, "job", 0)
+    rep = watch.poll()
+    assert rep.slow_hosts == ()

@@ -140,6 +140,57 @@ def test_watchdog_flags_persistent_straggler():
     assert rep2.slow_hosts == ()
 
 
+def test_watchdog_unflags_after_straggler_heals():
+    """patience is a *consecutive* requirement: one fast step resets the
+    streak, so a healed host is unflagged on the very next snapshot."""
+    wd = StepWatchdog(n_hosts=3, slack=1.5, patience=2)
+    step = 0
+    for _ in range(3):  # host 0 persistently slow → flagged
+        for h in range(3):
+            wd.report(h, step, 4.0 if h == 0 else 1.0)
+        rep = wd.snapshot(step)
+        step += 1
+    assert rep.slow_hosts == (0,)
+    for h in range(3):  # host 0 back to normal
+        wd.report(h, step, 1.0)
+    assert wd.snapshot(step).slow_hosts == ()
+    # ...and a single fast step in the middle of slowness resets patience
+    wd2 = StepWatchdog(n_hosts=3, slack=1.5, patience=3)
+    pattern = [4.0, 4.0, 1.0, 4.0, 4.0]  # never 3 consecutive
+    for step, d0 in enumerate(pattern):
+        for h in range(3):
+            wd2.report(h, step, d0 if h == 0 else 1.0)
+        rep2 = wd2.snapshot(step)
+    assert rep2.slow_hosts == ()
+
+
+def test_watchdog_window_and_partial_reports():
+    wd = StepWatchdog(n_hosts=2, window=4)
+    for step in range(10):
+        wd.report(0, step, 1.0)
+    assert len(wd.history[0]) == 4          # bounded history
+    assert wd.history[0][0][0] == 6         # oldest retained step slid up
+    # snapshot is None until every host reported the step (the elastic
+    # queue feeds all hosts per poll, so None means a host vanished)
+    assert wd.snapshot(9) is None
+    wd.report(1, 9, 1.0)
+    assert wd.snapshot(9) is not None
+
+
+def test_elastic_plan_relayout_exact():
+    """The deterministic re-layout contract, pinned on concrete shapes
+    (the property test asserts coverage; this asserts placement)."""
+    assert elastic_plan(8, 2, 4) == {0: (0, 2), 1: (2, 2), 2: (4, 2), 3: (6, 2)}
+    # non-divisible: ceil rows, tail truncated, still gap-free
+    assert elastic_plan(100, 4, 3) == {0: (0, 34), 1: (34, 34), 2: (68, 32)}
+    assert elastic_plan(7, 1, 3) == {0: (0, 3), 1: (3, 3), 2: (6, 1)}
+    # shrink and grow around the same batch agree on the row boundaries
+    assert elastic_plan(32, 8, 2) == {0: (0, 16), 1: (16, 16)}
+    # re-layout is a pure function of (batch, new_dp): old_dp never shifts
+    # rows — a rejoining host computes the same plan as the survivors
+    assert elastic_plan(32, 5, 2) == elastic_plan(32, 8, 2)
+
+
 def test_prefetcher_delivers_and_reports_wait():
     dcfg = data_mod.DataConfig(vocab_size=64, seq_len=8, global_batch=2)
     pf = data_mod.Prefetcher(data_mod.batches(dcfg), depth=2)
