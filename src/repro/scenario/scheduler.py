@@ -11,21 +11,29 @@ living next to ``plan.json``:
 * a worker *claims* a job by creating ``job_<key>.lease.json`` with
   ``O_CREAT | O_EXCL`` — the filesystem arbitrates, exactly one winner;
 * the lease carries a random token and an expiry; a heartbeat thread
-  renews it (token-checked, atomic replace) while the group's campaign
-  runs.  A worker that dies stops renewing; any survivor *takes over* the
-  expired lease by ``os.rename`` onto a tombstone — again exactly one
-  winner — records the expiry as a spent attempt, and re-claims;
+  renews it while the group's campaign runs — the renew's
+  read-check-write runs under a per-job ``flock`` mutex (released by the
+  OS if its holder dies), so a holder that stalls past expiry can never
+  clobber a usurper's fresh lease with its stale token.  A worker that
+  dies stops renewing; any survivor *takes over* the expired lease by
+  ``os.rename`` onto a tombstone — again exactly one winner — records
+  the expiry as a spent attempt, and re-claims;
 * a failing group is released with a ``job_<key>.fail_NNN.json`` record:
   retried with bounded exponential backoff until
-  :attr:`SchedulerConfig.max_attempts`, then declared dead — one bad
-  scenario cannot sink a ten-thousand-scenario plan;
+  :attr:`SchedulerConfig.max_attempts` *counted* attempts (errors and
+  expiries; ``preempted`` checkpoint-stops advanced a valid checkpoint
+  and never count), then declared dead — one bad scenario cannot sink a
+  ten-thousand-scenario plan;
 * completion writes ``job_<key>.done.json`` (atomic replace), and shard
   output is staged under ``queue/stage/<worker>/`` then published into
   ``out_dir/<scenario>/`` with one ``os.rename`` per scenario — so even a
   duplicated execution (a stalled-but-alive worker racing its usurper)
-  publishes exactly once, and every execution of a group produces the
-  *identical* campaign (same signature, same checkpoints under
-  ``ckpt_dir/group_<key>/``, kill-and-resume exact).
+  publishes exactly once: a staged copy is discarded only when the
+  destination was already published, a cross-filesystem stage falls back
+  to copy-then-rename, and any other rename failure propagates instead
+  of destroying the generated shards.  Every execution of a group
+  produces the *identical* campaign (same signature, same checkpoints
+  under ``ckpt_dir/group_<key>/``, kill-and-resume exact).
 
 Workers join and leave at any time: :func:`run_worker` simply scans the
 queue in plan order, runs whatever it can claim through
@@ -37,7 +45,10 @@ silent-but-not-dead worker is flagged before its lease even expires.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import errno
+import fcntl
 import glob
 import json
 import os
@@ -62,7 +73,8 @@ class SchedulerConfig:
 
     lease_s: float = 30.0      # lease lifetime; heartbeat renews at /3
     poll_s: float = 0.5        # idle worker re-scan period
-    max_attempts: int = 3      # attempts (incl. expiries) before a job is dead
+    max_attempts: int = 3      # attempts (errors + expiries; preemptions
+                               # never count) before a job is dead
     backoff_s: float = 2.0     # error retry n waits backoff_s · 2^(n-1)
 
 
@@ -131,6 +143,35 @@ class JobQueue:
         except (FileNotFoundError, json.JSONDecodeError):
             return None  # missing, or torn mid-replace — caller re-polls
 
+    @contextlib.contextmanager
+    def _lease_mutex(self, key: str, block: bool = True):
+        """Advisory per-job mutex (``flock`` on ``job_<key>.lock``)
+        serializing every lease read-check-write section — renew vs
+        takeover vs release.  The OS drops the lock if its holder dies,
+        so a crashed worker never wedges the job.  Yields True with the
+        lock held; with ``block=False`` yields False (lock NOT held)
+        when another process is mid-section."""
+        fd = os.open(self._p(f"job_{key}.lock"), os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_EX | (0 if block else fcntl.LOCK_NB))
+            except OSError:
+                yield False
+                return
+            yield True
+        finally:
+            os.close(fd)  # close releases the flock
+
+    def _spent(self, fail_paths: list[str]) -> int:
+        """Fail records that count toward :attr:`SchedulerConfig.
+        max_attempts`: errors and lease expiries.  ``preempted``
+        checkpoint-stops are excluded — each one advanced a valid
+        checkpoint, so a ``--stop-after-steps`` run (or a repeatedly
+        preempted worker pool) may need arbitrarily many resume cycles
+        and must never be declared dead for it."""
+        return sum(1 for p in fail_paths
+                   if (self._read(p) or {}).get("kind") != "preempted")
+
     # -- queue construction --------------------------------------------------
 
     @classmethod
@@ -165,9 +206,16 @@ class JobQueue:
                        if k in rec},
                     **({"choice": rec["choice"]} if "choice" in rec else {}),
                 })
-            elif rec.get("failed") and not q.fail_paths(g.key):
-                q._record_fail(g.key, kind="error", worker="run_plan",
-                               error=rec.get("error", "failed in run_plan"))
+            elif rec.get("failed"):
+                # Pinned to the fail_000 slot: racing workers that both
+                # observe the manifest's `failed` record at startup must
+                # spend ONE attempt total, not one per observer — only
+                # the O_EXCL winner records it, losers accept False.
+                q._write_once(q._p(f"job_{g.key}.fail_000.json"), {
+                    "t": time.time(), "kind": "error", "worker": "run_plan",
+                    "from_manifest": True,
+                    "error": rec.get("error", "failed in run_plan"),
+                })
         return q
 
     # -- job lifecycle -------------------------------------------------------
@@ -178,7 +226,8 @@ class JobQueue:
         if os.path.exists(self.done_path(key)):
             return "done"
         fails = self.fail_paths(key)
-        if len(fails) >= self.cfg.max_attempts:
+        spent = self._spent(fails)
+        if spent >= self.cfg.max_attempts:
             return "dead"
         lease = self._read(self.lease_path(key))
         if lease is not None:
@@ -186,7 +235,7 @@ class JobQueue:
         if fails:
             rec = self._read(fails[-1]) or {}
             if rec.get("kind") == "error":
-                wait = self.cfg.backoff_s * (2 ** (len(fails) - 1))
+                wait = self.cfg.backoff_s * (2 ** max(0, spent - 1))
                 try:
                     if os.path.getmtime(fails[-1]) + wait > now:
                         return "backoff"
@@ -212,16 +261,23 @@ class JobQueue:
 
     def _expire(self, key: str) -> None:
         """Tombstone an expired lease — ``os.rename`` picks exactly one
-        winner among racing survivors; the expiry is a spent attempt."""
-        lease = self._read(self.lease_path(key))
-        if lease is None or lease.get("expires", 0) >= time.time():
-            return
-        tomb = os.path.join(self.dir, "tombs",
-                            f"{key}.{lease.get('token', 'x')}")
-        try:
-            os.rename(self.lease_path(key), tomb)
-        except FileNotFoundError:
-            return  # another survivor won the takeover
+        winner among racing survivors; the expiry is a spent attempt.
+
+        Runs under the per-job mutex, non-blocking: if the holder is
+        mid-renewal right now it is stalled-but-alive — skip the
+        takeover this scan and let its renew land."""
+        with self._lease_mutex(key, block=False) as held:
+            if not held:
+                return
+            lease = self._read(self.lease_path(key))
+            if lease is None or lease.get("expires", 0) >= time.time():
+                return
+            tomb = os.path.join(self.dir, "tombs",
+                                f"{key}.{lease.get('token', 'x')}")
+            try:
+                os.rename(self.lease_path(key), tomb)
+            except FileNotFoundError:
+                return  # another survivor won the takeover
         self._record_fail(
             key, kind="expired", worker=lease.get("worker", "?"),
             error=f"lease expired (worker {lease.get('worker')} went silent)",
@@ -238,27 +294,36 @@ class JobQueue:
     def renew(self, key: str, token: str, extra: Optional[dict] = None) -> None:
         """Heartbeat: push the expiry out — but only while the lease is
         still ours and still alive.  ``extra`` (e.g. the tuned choice)
-        rides on the lease so a takeover can inherit it."""
-        lease = self._read(self.lease_path(key))
-        now = time.time()
-        if (lease is None or lease.get("token") != token
-                or lease.get("expires", 0) < now):
-            raise LeaseLost(f"lease on {key} expired or was taken over")
-        lease["expires"] = now + self.cfg.lease_s
-        if extra:
-            lease.update(extra)
-        self._write_atomic(self.lease_path(key), lease)
+        rides on the lease so a takeover can inherit it.
+
+        The whole read-check-write runs under the per-job mutex: a
+        holder that read a still-valid lease can no longer stall past
+        expiry and then clobber a usurper's fresh lease with its stale
+        token — either its renew lands before any takeover (mutex held
+        throughout), or the takeover already tombstoned/replaced the
+        lease and the re-read here raises :class:`LeaseLost`."""
+        with self._lease_mutex(key):
+            lease = self._read(self.lease_path(key))
+            now = time.time()
+            if (lease is None or lease.get("token") != token
+                    or lease.get("expires", 0) < now):
+                raise LeaseLost(f"lease on {key} expired or was taken over")
+            lease["expires"] = now + self.cfg.lease_s
+            if extra:
+                lease.update(extra)
+            self._write_atomic(self.lease_path(key), lease)
 
     def release(self, key: str, token: str, fail: Optional[dict] = None) -> None:
         """Give the job back (optionally recording a fail/requeue reason)."""
         if fail:
             self._record_fail(key, **fail)
-        lease = self._read(self.lease_path(key))
-        if lease and lease.get("token") == token:
-            try:
-                os.remove(self.lease_path(key))
-            except FileNotFoundError:
-                pass
+        with self._lease_mutex(key):
+            lease = self._read(self.lease_path(key))
+            if lease and lease.get("token") == token:
+                try:
+                    os.remove(self.lease_path(key))
+                except FileNotFoundError:
+                    pass
 
     def mark_done(self, key: str, token: str, record: dict) -> None:
         self._write_atomic(self.done_path(key), record)
@@ -298,11 +363,12 @@ class JobQueue:
                     g.choice = TuneChoice(**rec["choice"])
                 continue
             fails = self.fail_paths(g.key)
-            if len(fails) >= self.cfg.max_attempts:
+            spent = self._spent(fails)
+            if spent >= self.cfg.max_attempts:
                 last = self._read(fails[-1]) or {}
                 out[g.key] = {
                     "completed": False, "failed": True,
-                    "attempts": len(fails),
+                    "attempts": spent,
                     "error": last.get("error", "exhausted retries"),
                 }
         return out
@@ -332,6 +398,44 @@ def queue_dir_for(ckpt_dir: Optional[str], out_dir: Optional[str]) -> str:
                          "its on-disk queue (and kill-resume needs "
                          "checkpoints anyway)")
     return os.path.join(root, "queue")
+
+
+def _publish_dir(src: str, dst: str) -> None:
+    """Move a staged scenario directory into place, exactly-once.
+
+    The first publisher wins via one ``os.rename``.  The staged copy is
+    discarded ONLY when ``dst`` was already published (a duplicated
+    execution — the stalled-but-alive worker racing its usurper — lost
+    the race); a cross-filesystem stage (``EXDEV``: ``ckpt_dir`` hosting
+    ``queue/stage/`` on a different mount than ``out_dir``) falls back
+    to copying onto ``dst``'s filesystem and renaming from there; every
+    other rename failure (``EACCES``, ``ENOSPC``, …) propagates so the
+    generated shards are never silently destroyed."""
+    try:
+        os.rename(src, dst)
+        return
+    except OSError as e:
+        if os.path.isdir(dst):
+            shutil.rmtree(src, ignore_errors=True)  # duplicate: theirs won
+            return
+        if e.errno != errno.EXDEV:
+            raise
+    # EXDEV: stage a sibling copy on dst's filesystem (the .tmp suffix
+    # keeps shard_paths from walking it), then the same atomic rename.
+    tmp = f"{dst}.{uuid.uuid4().hex[:8]}.pub.tmp"
+    try:
+        shutil.copytree(src, tmp)
+        try:
+            os.rename(tmp, dst)
+        except OSError:
+            if not os.path.isdir(dst):
+                raise
+            # a duplicate published dst while we copied: theirs won
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    shutil.rmtree(tmp, ignore_errors=True)
+    shutil.rmtree(src, ignore_errors=True)
 
 
 def _heartbeat_file(queue_dir: str, worker: str) -> str:
@@ -399,10 +503,7 @@ def run_worker(
         os.makedirs(out_dir, exist_ok=True)
         for name, sr in group_results.items():
             src, dst = os.path.join(stage_root, name), os.path.join(out_dir, name)
-            try:
-                os.rename(src, dst)
-            except OSError:
-                shutil.rmtree(src, ignore_errors=True)  # duplicate: theirs won
+            _publish_dir(src, dst)
             sr.shard_dir = dst
 
     def flush_manifest() -> None:

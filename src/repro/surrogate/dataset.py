@@ -144,6 +144,24 @@ def committed(directory: str) -> bool:
     return os.path.exists(os.path.join(directory, "index.json"))
 
 
+def plan_scenario_order(manifest_path: str) -> Optional[list[str]]:
+    """Scenario names in **plan order** from a sweep manifest
+    (``plan.json``, written by :func:`repro.scenario.planner.run_plan`
+    and the elastic scheduler), or None when the manifest is absent or
+    unreadable.  This is the order a live
+    :meth:`ShardStream.from_cache` consumer saw, so a post-hoc reader
+    that follows it reproduces the live batch sequence even when
+    scenario names do not sort lexically in plan order."""
+    try:
+        with open(manifest_path) as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    names = [s.get("name") for g in m.get("groups", [])
+             for s in g.get("scenarios", [])]
+    return [n for n in names if n] or None
+
+
 _PROC_DIR = re.compile(r"^p\d{2,}$")
 
 

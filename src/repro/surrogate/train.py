@@ -8,8 +8,9 @@ random sampling + successive halving — a faithful, dependency-free stand-in
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -218,22 +219,50 @@ def fit_stream(
     return params, info
 
 
-def fit_shards(cfg: SurrogateConfig, shard_dir: str, **kw) -> tuple[Any, dict]:
+def fit_shards(
+    cfg: SurrogateConfig,
+    shard_dir: str,
+    *,
+    order: Optional[Sequence[str]] = None,
+    **kw,
+) -> tuple[Any, dict]:
     """:func:`fit_stream` on a campaign-written dataset shard directory.
 
     The campaign → shards → trainer handoff: generation and training need
     not share a process (the paper's production run generates on the big
     machine, trains elsewhere).  ``shard_dir`` may be a flat shard
     directory, a multi-host ``OUT/pNN/`` tree, or a sweep's committed
-    scenario cache — :func:`~repro.surrogate.dataset.shard_paths` fixes the
-    deterministic order.  Training streams shard-by-shard through
-    :func:`fit_stream`, so peak host memory is O(shard), not O(dataset) —
-    and a completed directory reproduces *exactly* what
-    :func:`fit_stream` computed live against the in-flight sweep (same
-    order, same seed → same batch sequence)."""
-    from repro.surrogate.dataset import ShardStream
+    scenario cache.  Training streams shard-by-shard through
+    :func:`fit_stream`, so peak host memory is O(shard), not O(dataset).
 
-    return fit_stream(cfg, ShardStream.from_dir(shard_dir), **kw)
+    Shard **order** decides the batch sequence, so it also decides whether
+    a post-hoc fit reproduces what :func:`fit_stream` computed live
+    against the in-flight sweep (live consumers walk scenarios in *plan*
+    order).  It is resolved in precedence order:
+
+    1. ``order`` — scenario subdirectory names, explicitly;
+    2. a ``plan.json`` manifest inside ``shard_dir`` (written there when
+       the sweep ran with ``--out`` as its manifest host) whose scenario
+       directories are all present and committed — plan order, via
+       :func:`~repro.surrogate.dataset.plan_scenario_order`;
+    3. the :func:`~repro.surrogate.dataset.shard_paths` layout order
+       (sorted scenario names).  Only here does live ≡ post-hoc require
+       that scenario names happen to sort lexically in plan order — pass
+       ``order`` (or keep ``plan.json`` next to the shards) when they
+       don't."""
+    from repro.surrogate.dataset import (
+        ShardStream, committed, plan_scenario_order,
+    )
+
+    if order is None:
+        names = plan_scenario_order(os.path.join(shard_dir, "plan.json"))
+        if names and all(committed(os.path.join(shard_dir, n)) for n in names):
+            order = names
+    if order is not None:
+        stream = ShardStream.from_cache(shard_dir, order, timeout_s=0.0)
+    else:
+        stream = ShardStream.from_dir(shard_dir)
+    return fit_stream(cfg, stream, **kw)
 
 
 def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):

@@ -99,6 +99,110 @@ def test_retry_backoff_then_dead(tmp_path):
     assert q.settled(plan)
 
 
+def test_preempted_requeues_never_count_toward_dead(tmp_path):
+    """A checkpoint-stopped group spends no attempt: arbitrarily many
+    preempt/resume cycles stay claimable, while real errors still count."""
+    cfg = SchedulerConfig(lease_s=30.0, max_attempts=2, backoff_s=0.0)
+    plan = _plan()
+    q = JobQueue.create(str(tmp_path), plan, cfg)
+    key = plan.groups[0].key
+    for _ in range(cfg.max_attempts + 2):          # >> max_attempts preemptions
+        c = q.try_claim(key, "w0")
+        assert c is not None
+        q.release(key, c.token, fail={"kind": "preempted", "error": "stopped"})
+        assert q.state(key) == "ready"             # no backoff, not dead
+    c = q.try_claim(key, "w0")
+    q.release(key, c.token, fail={"kind": "error", "error": "boom"})
+    assert q.state(key) != "dead"                  # 1 error < max_attempts=2
+    c = q.try_claim(key, "w0")
+    q.release(key, c.token, fail={"kind": "error", "error": "boom again"})
+    assert q.state(key) == "dead"                  # errors alone exhaust it
+    stats = q.stats(plan)
+    assert stats[key]["failed"] and stats[key]["attempts"] == 2
+
+
+def test_expire_skips_while_holder_mid_renewal(tmp_path):
+    """The per-job mutex serializes renew against takeover: while a
+    (stalled-but-alive) holder is inside its renew critical section, a
+    survivor's takeover is skipped — the stale-token clobber of a fresh
+    lease can no longer happen."""
+    import fcntl
+
+    cfg = SchedulerConfig(lease_s=0.05, backoff_s=0.0)
+    plan = _plan()
+    q = JobQueue.create(str(tmp_path), plan, cfg)
+    key = plan.groups[0].key
+    c0 = q.try_claim(key, "w0")
+    time.sleep(0.1)
+    assert q.state(key) == "expired"
+    # simulate w0 wedged inside its renew: hold the job's lease mutex
+    fd = os.open(os.path.join(str(tmp_path), f"job_{key}.lock"),
+                 os.O_CREAT | os.O_RDWR)
+    fcntl.flock(fd, fcntl.LOCK_EX)
+    try:
+        assert q.try_claim(key, "w1") is None      # takeover deferred
+        assert q.fail_paths(key) == []             # no expiry attempt spent
+    finally:
+        os.close(fd)
+    c1 = q.try_claim(key, "w1")                    # now the takeover lands
+    assert c1 is not None and c1.attempt == 2
+    with pytest.raises(LeaseLost):
+        q.renew(key, c0.token)
+
+
+def test_publish_discards_only_when_destination_exists(tmp_path, monkeypatch):
+    """publish() semantics (the shard-destroying OSError conflation):
+    duplicate → staged copy discarded; EXDEV → copy+rename fallback;
+    any other rename failure → raised, staged shards intact."""
+    import errno
+
+    from repro.scenario.scheduler import _publish_dir
+
+    def stage(name):
+        d = tmp_path / "stage" / name
+        d.mkdir(parents=True)
+        (d / "shard_00000.npz").write_bytes(b"x")
+        return str(d)
+
+    out = tmp_path / "out"
+    out.mkdir()
+    # 1) plain publish
+    src = stage("a")
+    _publish_dir(src, str(out / "a"))
+    assert (out / "a" / "shard_00000.npz").exists() and not os.path.exists(src)
+    # 2) duplicate execution: dst already published → staged copy discarded
+    src = stage("a")
+    (out / "a" / "shard_00000.npz").write_bytes(b"first")
+    _publish_dir(src, str(out / "a"))
+    assert (out / "a" / "shard_00000.npz").read_bytes() == b"first"
+    assert not os.path.exists(src)
+    # 3) EXDEV → copytree + rename lands the shards
+    real_rename = os.rename
+
+    def exdev_once(a, b, _seen=[]):
+        if not _seen and not a.endswith(".pub.tmp"):
+            _seen.append(1)
+            raise OSError(errno.EXDEV, "cross-device link", a, b)
+        return real_rename(a, b)
+
+    src = stage("b")
+    monkeypatch.setattr(os, "rename", exdev_once)
+    _publish_dir(src, str(out / "b"))
+    monkeypatch.undo()
+    assert (out / "b" / "shard_00000.npz").exists() and not os.path.exists(src)
+    # 4) EACCES (dst absent) → raises, staged shards preserved
+    def eacces(a, b):
+        raise OSError(errno.EACCES, "permission denied", a, b)
+
+    src = stage("c")
+    monkeypatch.setattr(os, "rename", eacces)
+    with pytest.raises(OSError):
+        _publish_dir(src, str(out / "c"))
+    monkeypatch.undo()
+    assert os.path.exists(os.path.join(src, "shard_00000.npz"))
+    assert not (out / "c").exists()
+
+
 def test_queue_consumes_run_plan_manifest(tmp_path):
     """Satellite: a serial run_plan's manifest seeds the queue — completed
     groups are pre-done, a `failed` record is a spent attempt the
@@ -114,6 +218,29 @@ def test_queue_consumes_run_plan_manifest(tmp_path):
                         SchedulerConfig(backoff_s=0.0), manifest_path=mpath)
     assert q.state(g1.key) == "done"
     assert len(q.fail_paths(g0.key)) == 1
+    c = q.try_claim(g0.key, "w0")
+    assert c is not None and c.attempt == 2
+
+
+def test_manifest_failed_seed_survives_startup_race(tmp_path, monkeypatch):
+    """Two workers that both observe the manifest's `failed` record with
+    no fail records yet must spend ONE attempt total: the seed is pinned
+    to the fail_000 slot, so the O_EXCL loser writes nothing."""
+    plan = _plan()
+    g0 = plan.groups[0]
+    mpath = str(tmp_path / "plan.json")
+    sc.write_manifest(plan, mpath, {
+        g0.key: {"completed": False, "failed": True, "error": "boom"}})
+    qdir = str(tmp_path / "queue")
+    cfg = SchedulerConfig(backoff_s=0.0)
+    q = JobQueue.create(qdir, plan, cfg, manifest_path=mpath)
+    # the racing loser: it read the queue BEFORE the winner's seed landed
+    monkeypatch.setattr(JobQueue, "fail_paths", lambda self, key: [])
+    JobQueue.create(qdir, plan, cfg, manifest_path=mpath)
+    monkeypatch.undo()
+    assert len(q.fail_paths(g0.key)) == 1          # one spent attempt, not two
+    rec = json.load(open(q.fail_paths(g0.key)[0]))
+    assert rec["kind"] == "error" and rec["from_manifest"]
     c = q.try_claim(g0.key, "w0")
     assert c is not None and c.attempt == 2
 
@@ -273,6 +400,43 @@ def test_fit_stream_concurrent_matches_posthoc_fit_shards(tmp_path):
     np.testing.assert_allclose(np.asarray(params_live["enc"][0]["w"]),
                                np.asarray(params_post["enc"][0]["w"]),
                                atol=1e-6)
+
+
+def test_fit_shards_follows_plan_order_not_sorted_names(tmp_path):
+    """Post-hoc fit_shards reproduces the live fit_stream batch sequence
+    even when scenario names do NOT sort lexically in plan order: an
+    explicit order= (or a plan.json manifest next to the shards) fixes
+    the consumption order; only the bare-directory fallback is layout-
+    sorted."""
+    from repro.surrogate.dataset import ShardStream, save_shards
+    from repro.surrogate.model import SurrogateConfig
+    from repro.surrogate.train import fit_shards, fit_stream
+
+    rng = np.random.default_rng(0)
+    out = tmp_path / "out"
+    plan_order = ["zeta_first", "alpha_second"]    # sorted() flips these
+    for name in plan_order:
+        save_shards(str(out / name),
+                    rng.normal(size=(2, 6, 3)).astype(np.float32),
+                    rng.normal(size=(2, 6, 3)).astype(np.float32),
+                    shard_size=1)
+    cfg = SurrogateConfig()
+    kw = dict(steps=6, batch=2, val_shards=1, seed=0)
+    live = fit_stream(cfg, ShardStream.from_cache(str(out), plan_order), **kw)[1]
+
+    post = fit_shards(cfg, str(out), order=plan_order, **kw)[1]
+    assert post["val_mae"] == pytest.approx(live["val_mae"], abs=1e-7)
+
+    # without order=, a plan.json next to the shards supplies plan order
+    with open(out / "plan.json", "w") as f:
+        json.dump({"groups": [{"scenarios": [{"name": n}]}
+                              for n in plan_order]}, f)
+    post2 = fit_shards(cfg, str(out), **kw)[1]
+    assert post2["val_mae"] == pytest.approx(live["val_mae"], abs=1e-7)
+
+    # the sorted-name fallback really is a different batch sequence here
+    sorted_run = fit_stream(cfg, ShardStream.from_dir(str(out)), **kw)[1]
+    assert sorted_run["val_mae"] != pytest.approx(live["val_mae"], abs=1e-7)
 
 
 def test_shard_stream_times_out_on_dead_sweep(tmp_path):
