@@ -62,6 +62,14 @@ def main() -> None:
     scheduler_bench.main(["--out", os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json")])
 
+    print("\n== Serving tier: result cache + microbatching ==")
+    from benchmarks import serving_bench
+
+    # full fidelity (like kernels/scheduler): the committed BENCH_serving
+    # .json should show steady-state rates, not smoke-size dispatch noise
+    serving_bench.main(["--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json")])
+
     print("\n== Roofline (from dry-run artifacts, if present) ==")
     from benchmarks import roofline
 

@@ -1,0 +1,118 @@
+"""Serving-tier benchmark: what the batcher and cache actually buy.
+
+Two comparisons over a jitted surrogate ensemble (random-init params —
+serving cost is shape-dependent, not weight-dependent):
+
+* **cached vs uncached latency** — the same scenario workload submitted
+  twice through the microbatcher; round 2 is answered from the LRU result
+  cache without touching the engine.  The ratio is the cache's speedup on
+  repeat traffic (the hazard-lookup pattern).
+* **batched vs serial throughput** — one engine call on B rows vs B calls
+  on 1 row, both padded to the same compiled bucket, so the comparison
+  isolates batching (amortized dispatch + device occupancy) from
+  compilation effects.
+
+Emits ``name,us_per_call,derived`` CSV lines per the harness contract and
+writes ``BENCH_serving.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serving_bench.py [--smoke] \
+        [--out BENCH_serving.json] [--batch 16] [--nt 256] [--requests 32]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (measures plumbing, not rates)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--nt", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.nt, args.requests, args.reps = 4, 32, 8, 1
+
+    from repro.serving import MicroBatcher, ResultCache, SurrogateEngine
+    from repro.surrogate.model import SurrogateConfig, init_params
+
+    cfg = SurrogateConfig(n_c=2, n_lstm=1, latent=16 if args.smoke else 32)
+    members = [init_params(cfg, jax.random.key(s)) for s in (0, 1)]
+    engine = SurrogateEngine(cfg, members, buckets=(args.batch,), nt=args.nt)
+    engine.warmup()
+    rng = np.random.default_rng(0)
+
+    def workload(tag):
+        return [(f"{tag}-{i}",
+                 rng.standard_normal((1, args.nt, 3)).astype(np.float32))
+                for i in range(args.requests)]
+
+    # -- cached vs uncached latency (through the full batcher stack) --------
+    uncached_ms, cached_ms = [], []
+    for rep in range(args.reps):
+        reqs = workload(f"rep{rep}")
+        with MicroBatcher(engine, max_batch=args.batch, max_wait_ms=2.0,
+                          cache=ResultCache(4 * args.requests)) as mb:
+            for round_ms, _ in ((uncached_ms, 0), (cached_ms, 1)):
+                t0 = time.perf_counter()
+                futs = [mb.submit(k, x) for k, x in reqs]
+                for f in futs:
+                    f.result(timeout=120)
+                round_ms.append((time.perf_counter() - t0) * 1e3
+                                / args.requests)
+            st = mb.stats()
+        assert st["cache_hits"] == args.requests, st  # round 2 never computed
+    unc, cac = min(uncached_ms), min(cached_ms)
+
+    # -- batched vs serial throughput (same compiled bucket) ----------------
+    xb = rng.standard_normal((args.batch, args.nt, 3)).astype(np.float32)
+    engine.infer(xb[:1])  # warm the eager pad path for single-row shapes
+    t_batch = t_serial = float("inf")
+    for _ in range(args.reps):
+        t0 = time.perf_counter()
+        engine.infer(xb)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for i in range(args.batch):
+            engine.infer(xb[i:i + 1])  # pads to the same bucket
+        t_serial = min(t_serial, time.perf_counter() - t0)
+    rows_s_batch = args.batch / t_batch
+    rows_s_serial = args.batch / t_serial
+
+    result = {
+        "smoke": args.smoke,
+        "batch": args.batch, "nt": args.nt, "requests": args.requests,
+        "uncached_ms_per_req": unc, "cached_ms_per_req": cac,
+        "cache_speedup": unc / max(cac, 1e-9),
+        "batched_rows_per_s": rows_s_batch,
+        "serial_rows_per_s": rows_s_serial,
+        "batch_speedup": rows_s_batch / max(rows_s_serial, 1e-9),
+    }
+    print(f"serving_uncached,{unc * 1e3:.0f},ms_per_req={unc:.2f}")
+    print(f"serving_cached,{cac * 1e3:.0f},speedup={result['cache_speedup']:.1f}x")
+    print(f"serving_batched,{t_batch / args.batch * 1e6:.0f},"
+          f"rows_per_s={rows_s_batch:.1f}")
+    print(f"serving_serial,{t_serial / args.batch * 1e6:.0f},"
+          f"batch_speedup={result['batch_speedup']:.2f}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[serving_bench] → {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,10 @@ Flags
     compiled campaign.  Writes a ``plan.json`` manifest next to the
     checkpoint dir (or into ``--out``), and per-scenario shard dirs under
     ``--out/<scenario>/``.  Single-process only.
+``--scenarios``
+    A serving feedback log (JSONL written by ``repro.launch.serve
+    --feedback-out``): the scenarios the surrogate was least sure about,
+    consumed exactly like a sweep — the active-learning loop closes here.
 ``--schedule / --workers / --lease-s``
     Run the sweep through the elastic work queue
     (``repro.scenario.scheduler``) instead of the serial planner loop:
@@ -156,6 +160,10 @@ def main(argv=None):
                     help="named catalog scenario (repro.scenario.CATALOG)")
     ap.add_argument("--sweep", default=None,
                     help="scenario sweep spec: JSON file path or inline JSON")
+    ap.add_argument("--scenarios", default=None, metavar="FEEDBACK",
+                    help="serving feedback log (JSONL of high-uncertainty "
+                         "scenarios) consumed as a sweep — the active-"
+                         "learning loop back from repro.launch.serve")
     ap.add_argument("--autotune", action="store_true",
                     help="pick (method, npart, kset) per plan group")
     ap.add_argument("--probe", action="store_true",
@@ -221,7 +229,7 @@ def main(argv=None):
     n_dev = args.devices or len(jax.devices())
     dmesh = make_case_mesh(n_dev) if n_dev > 1 else None
 
-    if args.sweep or args.scenario:
+    if args.sweep or args.scenario or args.scenarios:
         return _run_scenarios(args, tag, np_, dmesh)
 
     cfg = EnsembleConfig(
@@ -297,9 +305,14 @@ def _run_scenarios(args, tag, np_, dmesh) -> int:
             f"{tag} --scenario/--sweep are single-process for now (multi-host "
             f"campaigns take the plain flag path); drop the distributed flags"
         )
-    if args.sweep and args.scenario:
-        raise SystemExit(f"{tag} pass --scenario or --sweep, not both")
-    if args.sweep:
+    if sum(map(bool, (args.sweep, args.scenario, args.scenarios))) > 1:
+        raise SystemExit(
+            f"{tag} pass one of --scenario / --sweep / --scenarios")
+    if args.scenarios:
+        from repro.serving.feedback import feedback_plan
+
+        plan = feedback_plan(args.scenarios)
+    elif args.sweep:
         plan = sc.make_plan(sc.sweep_from_json(args.sweep))
     else:
         scn = dataclasses.replace(
@@ -369,6 +382,7 @@ def _worker_cmd(args, worker: str) -> list:
            "--shard-size", str(args.shard_size)]
     cmd += ["--warm-start"] if args.warm_start else ["--no-warm-start"]
     for flag, val in (("--sweep", args.sweep), ("--scenario", args.scenario),
+                      ("--scenarios", args.scenarios),
                       ("--ebe-backend", args.ebe_backend),
                       ("--ms-backend", args.ms_backend),
                       ("--calibration", args.calibration),

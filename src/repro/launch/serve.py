@@ -1,11 +1,28 @@
-"""Serving launcher: batched generation with resident or host-offloaded KV.
+"""Serving launcher: batched inference behind the Engine protocol.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
-        --batch 4 --new 16 [--offload-kv --npart 4] [--host-devices 8 --mesh 2x4]
+Two engines, one serving stack (microbatcher + signature-keyed result
+cache + active-learning feedback):
 
-Production posture mirrors launch/train.py: same mesh/rules machinery, the
-KV-offload path is Algorithm 3 with the layer-group attention as the
-streamed kernel (serving/decode.py).
+    # surrogate: serve a trained FEM surrogate on catalog scenarios
+    PYTHONPATH=src python -m repro.launch.serve --engine surrogate \
+        --ckpt ckpt/surrogate --scenario ricker-soft-basin \
+        --scenario chirp-stiff-shelf --repeat 2 \
+        --feedback-out fb.jsonl [--shard --host-devices 4]
+
+    # decode: batched LLM generation, resident or host-offloaded KV
+    PYTHONPATH=src python -m repro.launch.serve --engine decode \
+        --arch granite-8b --reduced --batch 4 --new 16 \
+        [--offload-kv --npart 4] [--temperature 0.8]
+
+Surrogate requests are keyed by :meth:`Scenario.signature` — a repeated
+scenario (``--repeat``) is answered from the result cache without touching
+the accelerator.  With ``--feedback-out``, requests whose ensemble
+disagreement exceeds ``--feedback-threshold`` are appended as scenario
+records; ``repro.launch.campaign --scenarios <file>`` consumes them as a
+new data-generation sweep (the active-learning loop).
+
+The KV-offload decode path is Algorithm 3 with the layer-group attention
+as the streamed kernel, now engine-internal (`serving/engine.DecodeEngine`).
 """
 import argparse
 import os
@@ -25,90 +42,201 @@ def _early_args():
 
 _early_args()
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 
-def main():
+def _build_parser():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="surrogate",
+                    choices=["surrogate", "decode"])
+    # serving stack
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="flush a microbatch once this many rows are pending")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="latency floor: flush when the oldest request has "
+                         "waited this long")
+    ap.add_argument("--cache-size", type=int, default=256,
+                    help="result-cache capacity (entries); 0 disables")
+    ap.add_argument("--feedback-out", default=None,
+                    help="append high-uncertainty scenarios to this JSONL "
+                         "(consumed by campaign --scenarios)")
+    ap.add_argument("--feedback-threshold", type=float, default=0.05,
+                    help="ensemble-disagreement score above which a request "
+                         "is routed to --feedback-out")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="submit the workload this many times (round ≥ 2 "
+                         "demonstrates cache hits)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the batch axis over all devices "
+                         "(ShardedEngine on the case mesh)")
+    ap.add_argument("--host-devices", type=int, default=0)
+    # surrogate workload
+    ap.add_argument("--ckpt", default=None,
+                    help="surrogate checkpoint dir (surrogate.train."
+                         "save_surrogate)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="catalog scenario to serve (repeatable)")
+    ap.add_argument("--sweep", default=None,
+                    help="scenario sweep spec (JSON file or inline) to serve")
+    # decode workload
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode: number of single-prompt requests")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--offload-kv", action="store_true")
     ap.add_argument("--npart", type=int, default=2)
-    ap.add_argument("--kv-schedule", default="serial", choices=["serial", "prefetch", "donate"])
+    ap.add_argument("--kv-schedule", default="serial",
+                    choices=["serial", "prefetch", "donate"])
     ap.add_argument("--kv-prefetch", type=int, default=1)
-    ap.add_argument("--mesh", default=None)
-    ap.add_argument("--host-devices", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 = seeded categorical sampling")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def _stack(args, engine):
+    """Engine → (batcher, cache, feedback) per the CLI serving flags."""
+    from repro.serving import FeedbackLog, MicroBatcher, ResultCache, ShardedEngine
+
+    if args.shard:
+        engine = ShardedEngine(engine)
+        print(f"[serve] sharding batch axis over {engine.n_devices} device(s)")
+    engine.warmup()
+    cache = ResultCache(args.cache_size) if args.cache_size > 0 else None
+    feedback = (
+        FeedbackLog(args.feedback_out, threshold=args.feedback_threshold)
+        if args.feedback_out else None
+    )
+    batcher = MicroBatcher(
+        engine, max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        cache=cache, feedback=feedback,
+    )
+    return batcher, cache, feedback
+
+
+def _report(batcher, cache, feedback):
+    st = batcher.stats()
+    print(f"[serve] requests={st['requests']} rows={st['rows']} "
+          f"batches={st['batches']} (full={st['flush_full']} "
+          f"timeout={st['flush_timeout']} drain={st['flush_drain']}) "
+          f"cache_hits={st['cache_hits']}")
+    print(f"[serve] wait mean={st['wait_ms_mean']:.2f}ms "
+          f"max={st['wait_ms_max']:.2f}ms  "
+          f"infer mean={st['infer_ms_mean']:.1f}ms/batch")
+    if cache is not None:
+        cs = cache.stats()
+        print(f"[serve] cache: {cs['size']}/{cs['capacity']} entries, "
+              f"{cs['hits']} hit(s), {cs['misses']} miss(es), "
+              f"{cs['evictions']} eviction(s)")
+    if feedback is not None:
+        fs = feedback.stats()
+        print(f"[serve] feedback: {fs['routed']}/{fs['observed']} request(s) "
+              f"routed to {fs['path']} (threshold {fs['threshold']})")
+
+
+def _serve_surrogate(args) -> int:
+    from repro import scenario as sc
+    from repro.serving import SurrogateEngine, feedback_plan
+
+    if not args.ckpt:
+        print("[serve] --engine surrogate needs --ckpt", file=sys.stderr)
+        return 2
+    if args.sweep:
+        scenarios = sc.expand(sc.sweep_from_json(args.sweep))
+    else:
+        names = args.scenario or ["ricker-soft-basin"]
+        scenarios = [sc.get(n) for n in names]
+    nts = {s.nt for s in scenarios}
+    if len(nts) > 1:
+        print(f"[serve] scenarios disagree on nt ({sorted(nts)}); "
+              f"serve them separately", file=sys.stderr)
+        return 2
+
+    engine = SurrogateEngine.from_checkpoint(
+        args.ckpt, buckets=(args.max_batch,), nt=nts.pop())
+    print(f"[serve] surrogate step={engine.step} "
+          f"members={len(engine.members)} scale={engine.scale:.3g} "
+          f"signature={engine.signature()}")
+
+    batcher, cache, feedback = _stack(args, engine)
+    with batcher:
+        for rnd in range(args.repeat):
+            futs = [
+                (s, batcher.submit(s.signature(),
+                                   s.waves().astype(np.float32), meta=s))
+                for s in scenarios
+            ]
+            for s, f in futs:
+                r = f.result()
+                src = "cache" if r.cached else f"compute {r.infer_ms:.1f}ms"
+                print(f"[serve] round {rnd + 1} {s.name}: "
+                      f"y{tuple(r.y.shape)} score={r.score:.3f} [{src}]")
+        _report(batcher, cache, feedback)
+
+    if feedback is not None and feedback.stats()["routed"] > 0:
+        plan = feedback_plan(args.feedback_out)
+        print(f"[serve] feedback plan: {plan.n_scenarios} scenario(s) in "
+              f"{len(plan.groups)} compile group(s) — run with\n"
+              f"        python -m repro.launch.campaign --scenarios "
+              f"{args.feedback_out} --out shards/feedback")
+    return 0
+
+
+def _serve_decode(args) -> int:
+    import time
+
+    import jax
 
     from repro.configs import ARCHS
     from repro.models import transformer as T
-    from repro.parallel import sharding as sh
-    from repro.serving import decode as D
-
+    from repro.serving import DecodeEngine, ServeConfig
+    
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = None
-    ctx = None
-    if args.mesh:
-        dims = tuple(int(x) for x in args.mesh.split("x"))
-        axes = ("data", "model")[: len(dims)] if len(dims) == 2 else ("pod", "data", "model")
-        from repro.launch.mesh import make_auto_mesh
+    scfg = ServeConfig(
+        kv_offload=args.offload_kv, kv_npart=args.npart,
+        temperature=args.temperature, seed=args.seed,
+    )
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    engine = DecodeEngine(
+        cfg, params, n_new=args.new, prompt_len=args.prompt_len,
+        serve=scfg, buckets=(args.max_batch,),
+        kv_schedule=args.kv_schedule, kv_prefetch=args.kv_prefetch,
+    )
+    print(f"[serve] decode arch={args.arch} "
+          f"[KV {'host-offloaded, %d blocks' % args.npart if args.offload_kv else 'resident'}] "
+          f"{'greedy' if args.temperature == 0 else f'T={args.temperature}'} "
+          f"signature={engine.signature()}")
 
-        mesh = make_auto_mesh(dims, axes)
-
-    total = args.prompt_len + args.new
-    params, pspecs = T.init_params(cfg, jax.random.key(0))
-    prompt = jax.random.randint(jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
-
-    def run():
-        import time
-
-        t0 = time.time()
-        if args.offload_kv:
-            st = {"pos": jnp.zeros((), jnp.int32)}
-            blocks = D.make_kv_blocks(cfg, args.batch, cache_len=total, npart=args.npart,
-                                      dtype=jnp.dtype(cfg.dtype))
-            step = jax.jit(lambda p, t, s, b: D.decode_step_offloaded(
-                p, cfg, t, s, b, schedule=args.kv_schedule, prefetch=args.kv_prefetch))
-            logits = None
-            for t in range(args.prompt_len):
-                logits, st, blocks = step(params, prompt[:, t : t + 1], st, blocks)
-            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
-            outs = [cur]
-            for _ in range(args.new - 1):
-                logits, st, blocks = step(params, cur, st, blocks)
-                cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
-                outs.append(cur)
-        else:
-            logits, st = T.prefill(params, cfg, {"tokens": prompt}, cache_len=total)
-            step = jax.jit(lambda p, t, s: T.decode_step(p, cfg, t, s))
-            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
-            outs = [cur]
-            for _ in range(args.new - 1):
-                logits, st = step(params, cur, st)
-                cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(prompt.dtype)
-                outs.append(cur)
-        toks = np.asarray(jnp.concatenate(outs, 1))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size,
+    ), np.int32)
+    batcher, cache, feedback = _stack(args, engine)
+    t0 = time.time()
+    with batcher:
+        for rnd in range(args.repeat):
+            futs = [batcher.submit(f"prompt{i}", prompts[i:i + 1])
+                    for i in range(args.batch)]
+            outs = [f.result() for f in futs]
         dt = time.time() - t0
-        print(f"generated {args.new} × batch {args.batch} in {dt:.1f}s "
-              f"({args.new*args.batch/dt:.1f} tok/s) "
-              f"[KV {'host-offloaded, ' + str(args.npart) + ' blocks' if args.offload_kv else 'resident'}]")
-        print("sample:", toks[0][:16].tolist())
+        toks = np.concatenate([r.y for r in outs], axis=0)
+        print(f"[serve] generated {args.new} × batch {args.batch} in {dt:.1f}s "
+              f"({args.new * args.batch / dt:.1f} tok/s)")
+        print("[serve] sample:", toks[0][:16].tolist())
+        _report(batcher, cache, feedback)
+    return 0
 
-    if mesh is not None:
-        rules = sh.rules_for(cfg, mesh, kind="decode", global_batch=args.batch, seq_len=total)
-        with mesh, sh.use_mesh(mesh, rules):
-            run()
-    else:
-        run()
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.engine == "surrogate":
+        return _serve_surrogate(args)
+    return _serve_decode(args)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

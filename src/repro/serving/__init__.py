@@ -1,0 +1,26 @@
+"""Serving subsystem: generic batched inference over trained models.
+
+``engine``   the :class:`Engine` protocol (``warmup``/``infer``/
+             ``signature``) with three implementations — the FEM-surrogate
+             forward pass, the KV-offload LLM decode, and a batch-axis
+             device-mesh sharding wrapper.
+``batcher``  request microbatching: bounded queue, max-batch / max-wait
+             flush, pad-to-compiled-shape, per-request latency accounting.
+``cache``    LRU result cache keyed by (engine signature, request
+             signature) — repeated hazard lookups never touch the
+             accelerator.
+``feedback`` the active-learning loop: high-uncertainty requests become
+             scenario records the campaign planner consumes as new sweep
+             jobs.
+``decode``   engine-internal KV-offloaded decode loop (Algorithm 3 applied
+             to serving); production callers use :class:`DecodeEngine`.
+"""
+from repro.serving.batcher import MicroBatcher, Request, ServedResult  # noqa: F401
+from repro.serving.cache import ResultCache  # noqa: F401
+from repro.serving.decode import ServeConfig  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DecodeEngine, Engine, InferResult, ShardedEngine, SurrogateEngine,
+)
+from repro.serving.feedback import (  # noqa: F401
+    FeedbackLog, feedback_plan, load_feedback, scenario_to_dict,
+)

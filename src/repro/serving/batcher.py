@@ -1,0 +1,226 @@
+"""Request microbatcher: bounded queue → padded engine batches.
+
+The serving front door.  Callers :meth:`MicroBatcher.submit` individual
+requests (each carrying one or more input rows) and get a
+:class:`concurrent.futures.Future` back; a background thread coalesces
+queued requests into engine batches under a ``max_batch`` / ``max_wait_ms``
+flush policy:
+
+* **flush-on-full** — the moment pending rows reach ``max_batch``;
+* **flush-on-timeout** — when the *oldest* pending request has waited
+  ``max_wait_ms``, whatever has accumulated goes (latency floor for quiet
+  traffic).
+
+The engine pads each batch to its compiled bucket shapes (the
+``pad_kset``-style pad+mask inside :func:`repro.surrogate.model.predict`),
+so steady-state traffic never recompiles regardless of how requests
+coalesce — and because rows are independent, a request's result is
+bit-identical whether it rode a full batch or its own (test-asserted).
+
+A :class:`repro.serving.cache.ResultCache` short-circuits ``submit``:
+a hit resolves the future on the caller thread without touching the queue
+or the accelerator.  A :class:`repro.serving.feedback.FeedbackLog` observes
+every computed request's uncertainty score and routes high-scoring
+scenarios back to the campaign planner.
+
+Per-request latency is accounted in three phases — queue wait, batch
+compute, total — surfaced by :meth:`MicroBatcher.stats` next to the cache
+hit/miss/eviction counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a cache ``key`` + input rows ``x [n, ...]``.
+
+    ``meta`` travels untouched to the feedback log (the surrogate serving
+    path puts the :class:`~repro.scenario.catalog.Scenario` here so
+    high-uncertainty requests can be routed back to the planner).
+    """
+
+    key: str
+    x: np.ndarray
+    meta: Any = None
+    t_submit: float = 0.0
+    t_flush: float = 0.0
+    future: Optional[Future] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedResult:
+    """What a request's future resolves to."""
+
+    y: np.ndarray          # [n, ...] output rows
+    score: float           # max uncertainty score over the request's rows
+    cached: bool           # served from the result cache
+    wait_ms: float         # queue wait (0 for cache hits)
+    infer_ms: float        # batch compute share (0 for cache hits)
+
+
+class MicroBatcher:
+    """Batches requests through one :class:`~repro.serving.engine.Engine`.
+
+    ``queue_depth`` bounds the submit queue — a saturated server applies
+    backpressure at ``submit`` (blocks) rather than growing without bound.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        max_batch: int = 8,
+        max_wait_ms: float = 5.0,
+        queue_depth: int = 256,
+        cache=None,
+        feedback=None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be ≥ 0, got {max_wait_ms}")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.cache = cache
+        self.feedback = feedback
+        self._q: "queue.Queue[Optional[Request]]" = queue.Queue(maxsize=queue_depth)
+        self._lock = threading.Lock()
+        self._stats = {
+            "requests": 0, "rows": 0, "batches": 0,
+            "flush_full": 0, "flush_timeout": 0, "flush_drain": 0,
+            "cache_hits": 0,
+            "wait_ms_sum": 0.0, "infer_ms_sum": 0.0, "wait_ms_max": 0.0,
+        }
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # -- front door ---------------------------------------------------------
+    def _cache_key(self, key: str) -> tuple:
+        return (self.engine.signature(), key)
+
+    def submit(self, key: str, x, meta: Any = None) -> Future:
+        """Enqueue one request; returns a future of :class:`ServedResult`.
+
+        The result cache is consulted *here*, on the caller thread: a hit
+        never enqueues, never batches, never touches the accelerator.
+        """
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        fut: Future = Future()
+        if self.cache is not None:
+            hit = self.cache.get(self._cache_key(key))
+            if hit is not None:
+                with self._lock:
+                    self._stats["requests"] += 1
+                    self._stats["cache_hits"] += 1
+                fut.set_result(dataclasses.replace(hit, cached=True))
+                return fut
+        req = Request(key=key, x=np.asarray(x), meta=meta,
+                      t_submit=time.monotonic(), future=fut)
+        if req.x.ndim < 1 or req.n < 1:
+            raise ValueError(f"request x must be [n≥1, ...], got {req.x.shape}")
+        self._q.put(req)
+        return fut
+
+    # -- batch loop ---------------------------------------------------------
+    def _loop(self) -> None:
+        pending: list[Request] = []
+        rows = 0
+        while True:
+            if pending:
+                deadline = pending[0].t_submit + self.max_wait_s
+                timeout = max(0.0, deadline - time.monotonic())
+            else:
+                timeout = None  # idle: block until traffic (or close)
+            try:
+                req = self._q.get(timeout=timeout)
+            except queue.Empty:
+                self._flush(pending, "timeout")
+                pending, rows = [], 0
+                continue
+            if req is None:  # close sentinel: drain and exit
+                if pending:
+                    self._flush(pending, "drain")
+                return
+            pending.append(req)
+            rows += req.n
+            if rows >= self.max_batch:
+                self._flush(pending, "full")
+                pending, rows = [], 0
+
+    def _flush(self, pending: list[Request], reason: str) -> None:
+        if not pending:
+            return
+        t0 = time.monotonic()
+        try:
+            xb = np.concatenate([r.x for r in pending], axis=0)
+            res = self.engine.infer(xb)
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
+            for r in pending:
+                r.future.set_exception(e)
+            return
+        infer_ms = (time.monotonic() - t0) * 1e3
+        with self._lock:
+            st = self._stats
+            st["batches"] += 1
+            st[f"flush_{reason}"] += 1
+            st["requests"] += len(pending)
+            st["rows"] += sum(r.n for r in pending)
+            st["infer_ms_sum"] += infer_ms
+        lo = 0
+        for r in pending:
+            hi = lo + r.n
+            y = np.asarray(res.y[lo:hi])
+            score = float(np.max(res.score[lo:hi]))
+            lo = hi
+            wait_ms = (t0 - r.t_submit) * 1e3
+            with self._lock:
+                self._stats["wait_ms_sum"] += wait_ms
+                self._stats["wait_ms_max"] = max(self._stats["wait_ms_max"], wait_ms)
+            out = ServedResult(y=y, score=score, cached=False,
+                               wait_ms=wait_ms, infer_ms=infer_ms)
+            if self.cache is not None:
+                self.cache.put(self._cache_key(r.key), out)
+            if self.feedback is not None:
+                self.feedback.observe(r.meta, score, key=r.key)
+            r.future.set_result(out)
+
+    # -- lifecycle / telemetry ---------------------------------------------
+    def stats(self) -> dict:
+        """Counter snapshot (+ cache counters when a cache is attached)."""
+        with self._lock:
+            st = dict(self._stats)
+        served = max(1, st["requests"] - st["cache_hits"])
+        st["wait_ms_mean"] = st["wait_ms_sum"] / served
+        st["infer_ms_mean"] = st["infer_ms_sum"] / max(1, st["batches"])
+        if self.cache is not None:
+            st["cache"] = self.cache.stats()
+        return st
+
+    def close(self) -> None:
+        """Drain pending requests and stop the batch thread (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+        self._thread.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

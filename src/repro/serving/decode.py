@@ -27,7 +27,12 @@ from repro.models import transformer as T
 class ServeConfig:
     kv_offload: bool = False
     kv_npart: int = 4
-    temperature: float = 0.0  # 0 → greedy
+    temperature: float = 0.0  # 0 → greedy, else seeded categorical sampling
+    seed: int = 0             # sampling key when temperature > 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be ≥ 0, got {self.temperature}")
 
 
 def _tree_slice(tree: Any, lo: int, hi: int) -> Any:
@@ -122,6 +127,79 @@ def make_kv_blocks(cfg: ModelConfig, B: int, cache_len: int, npart: int, dtype=j
     return blocks
 
 
+def sample_token(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    """Next token from ``logits [B, V]``: argmax when ``temperature == 0``
+    (exactly — no epsilon path, so greedy ≡ temperature-0 sampling is an
+    identity, not an approximation), else a seeded categorical draw over
+    ``logits / temperature``.  ``temperature`` is a static Python float: the
+    branch resolves at trace time and the greedy program carries no RNG."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jnp.ndarray,  # [B, S0]
+    n_new: int,
+    scfg: ServeConfig = ServeConfig(),
+    cache_len: Optional[int] = None,
+    kv_schedule: str = "serial",
+    kv_prefetch: int = 1,
+) -> jnp.ndarray:
+    """Serving loop honoring every :class:`ServeConfig` field — resident or
+    host-offloaded KV (``kv_offload``/``kv_npart``), greedy or
+    temperature-sampled next tokens (``temperature``/``seed``).
+
+    Prefill is by-decode (one step per prompt token) so the resident and
+    offloaded paths share one step shape; returns ``[B, S0 + n_new]``
+    (prompt + generated), like :func:`greedy_generate` always did.
+    """
+    B, S0 = prompt.shape
+    total = S0 + n_new
+    cache_len = cache_len or total
+    key = jax.random.key(scfg.seed)
+
+    def pick(logits, key):
+        tok = sample_token(logits[:, -1], scfg.temperature, key)
+        return tok[:, None].astype(prompt.dtype)
+
+    if scfg.kv_offload:
+        state = {"pos": jnp.zeros((), jnp.int32)}
+        blocks = make_kv_blocks(cfg, B, cache_len=cache_len, npart=scfg.kv_npart,
+                                dtype=jnp.dtype(cfg.dtype))
+        step = jax.jit(lambda p, t, s, b: decode_step_offloaded(
+            p, cfg, t, s, b, schedule=kv_schedule, prefetch=kv_prefetch))
+
+        def advance(tok):
+            nonlocal state, blocks
+            logits, state, blocks = step(params, tok, state, blocks)
+            return logits
+    else:
+        state = T.init_decode_state(cfg, B, cache_len=cache_len,
+                                    dtype=jnp.dtype(cfg.dtype))
+        step = jax.jit(lambda p, t, s: T.decode_step(p, cfg, t, s))
+
+        def advance(tok):
+            nonlocal state
+            logits, state = step(params, tok, state)
+            return logits
+
+    out = [prompt]
+    logits = None
+    for t in range(S0):
+        logits = advance(prompt[:, t : t + 1])
+    key, sub = jax.random.split(key)
+    cur = pick(logits, sub)
+    for _ in range(n_new):
+        out.append(cur)
+        logits = advance(cur)
+        key, sub = jax.random.split(key)
+        cur = pick(logits, sub)
+    return jnp.concatenate(out, axis=1)
+
+
 def greedy_generate(
     params,
     cfg: ModelConfig,
@@ -130,19 +208,8 @@ def greedy_generate(
     scfg: ServeConfig = ServeConfig(),
     cache_len: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Reference serving loop (resident cache): prefill-by-decode + generate."""
-    B, S0 = prompt.shape
-    total = S0 + n_new
-    cache_len = cache_len or total
-    state = T.init_decode_state(cfg, B, cache_len=cache_len, dtype=jnp.dtype(cfg.dtype))
-    step = jax.jit(lambda p, t, s: T.decode_step(p, cfg, t, s))
-    out = [prompt]
-    logits = None
-    for t in range(S0):
-        logits, state = step(params, prompt[:, t : t + 1], state)
-    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
-    for _ in range(n_new):
-        out.append(cur)
-        logits, state = step(params, cur, state)
-        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
-    return jnp.concatenate(out, axis=1)
+    """Reference serving loop: :func:`generate` pinned to greedy resident
+    decode (the historical semantics — ``scfg``'s sampling and offload
+    fields are overridden, not silently ignored as they once were)."""
+    scfg = dataclasses.replace(scfg, temperature=0.0, kv_offload=False)
+    return generate(params, cfg, prompt, n_new, scfg, cache_len)

@@ -1,0 +1,320 @@
+"""The serving tier's `Engine` protocol and its three implementations.
+
+The campaign machinery exists to *train* a surrogate; this module is where
+trained models get *served*.  Everything behind one small protocol —
+``warmup() / infer(batch) / signature()`` — so the batcher
+(:mod:`repro.serving.batcher`), result cache (:mod:`repro.serving.cache`)
+and active-learning feedback loop (:mod:`repro.serving.feedback`) are
+generic over workloads:
+
+``SurrogateEngine``
+    the jitted FEM-surrogate forward pass (:func:`repro.surrogate.model.
+    predict` — the canonical pad-to-bucket preprocessing shared with the
+    trainer's validation path), params restored through
+    :mod:`repro.training.checkpoint`.  Holds one param set or an *ensemble*
+    of them; with an ensemble, ``infer`` returns the member mean plus a
+    per-request disagreement score — the active-learning signal.
+``DecodeEngine``
+    the KV-offload LLM decode loop rehomed behind the protocol
+    (:mod:`repro.serving.decode` is now an engine internal — production
+    callers go through here).
+``ShardedEngine``
+    wraps any engine and shards the batch axis of each ``infer`` call over
+    a device mesh (``launch/mesh.make_case_mesh`` + a ``NamedSharding``
+    placement), padding the batch to the mesh size first — the campaign's
+    case-axis sharding applied to inference traffic.
+
+``signature()`` is the cache-identity contract: two engines with equal
+signatures must produce bit-identical results for equal inputs (so
+:mod:`repro.serving.cache` keys entries by ``(engine signature, request
+signature)`` and a model/config change can never serve stale answers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, NamedTuple, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class InferResult(NamedTuple):
+    """One batched inference: per-row outputs + per-row uncertainty score
+    (0 where the engine has no uncertainty notion — e.g. greedy decode)."""
+
+    y: np.ndarray      # [B, ...]
+    score: np.ndarray  # [B] float
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What the serving stack requires of a model."""
+
+    def warmup(self) -> None:
+        """Compile every steady-state batch shape ahead of traffic."""
+        ...
+
+    def infer(self, x) -> InferResult:
+        """Run one batch ``x [B, ...]`` → :class:`InferResult`.  Rows must
+        be independent: the batcher asserts batched ≡ per-request."""
+        ...
+
+    def signature(self) -> str:
+        """Stable digest of everything that shapes the outputs (model
+        params, config, preprocessing) — the cache-identity key."""
+        ...
+
+
+def _params_digest(members: Sequence[Any]) -> str:
+    """Content hash over every leaf of every member param pytree."""
+    h = hashlib.sha256()
+    for p in members:
+        flat, _ = jax.tree_util.tree_flatten_with_path(p)
+        for path, leaf in flat:
+            h.update(jax.tree_util.keystr(path).encode())
+            arr = np.asarray(jax.device_get(leaf))
+            h.update(str(arr.dtype).encode() + str(arr.shape).encode())
+            h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# surrogate forward pass
+# ---------------------------------------------------------------------------
+
+
+class SurrogateEngine:
+    """Serves the §3 FEM surrogate: bedrock wave [nt,3] → surface response.
+
+    ``params`` is one param pytree or a list of them (an ensemble of
+    independently-trained members — e.g. different seeds over the same
+    shards).  ``infer`` returns the ensemble-mean prediction *denormalized
+    by* ``scale`` (the trainer's MAE normalization constant, restored from
+    the checkpoint), and a per-row disagreement score: the RMS deviation of
+    members from their mean, normalized by the mean's RMS.  A single-member
+    engine always scores 0 — it has no disagreement to report.
+
+    All preprocessing (batch pad-to-bucket, time pad-to-``2**n_c``) lives
+    in :func:`repro.surrogate.model.predict`, shared with the trainer's
+    validation path.  ``buckets`` defaults to one compiled batch shape
+    (``(max_batch,)`` via the batcher) so steady-state traffic never
+    recompiles; pass several to trade latency for compute on small batches.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        scale: float = 1.0,
+        buckets: Sequence[int] = (8,),
+        nt: int = 64,
+        step: int = 0,
+    ):
+        from repro.surrogate.model import SurrogateConfig  # noqa: F401 (type)
+
+        self.cfg = cfg
+        self.members = list(params) if isinstance(params, (list, tuple)) else [params]
+        if not self.members:
+            raise ValueError("SurrogateEngine needs at least one param set")
+        self.scale = float(scale)
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.nt = int(nt)
+        self.step = int(step)
+        self._sig: Optional[str] = None
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, **kw) -> "SurrogateEngine":
+        """Restore the newest trained surrogate written by
+        :func:`repro.surrogate.train.save_surrogate` (a
+        ``training/checkpoint`` ``CheckpointManager`` directory)."""
+        from repro.surrogate.train import load_surrogate
+
+        cfg, members, scale, step = load_surrogate(ckpt_dir)
+        return cls(cfg, members, scale=scale, step=step, **kw)
+
+    # -- protocol -----------------------------------------------------------
+    def signature(self) -> str:
+        if self._sig is None:
+            blob = json.dumps(
+                {
+                    "engine": "surrogate",
+                    "cfg": dataclasses.asdict(self.cfg),
+                    "scale": self.scale,
+                    "members": len(self.members),
+                    "params": _params_digest(self.members),
+                },
+                sort_keys=True,
+            )
+            self._sig = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        return self._sig
+
+    def warmup(self) -> None:
+        for b in self.buckets:
+            self.infer(np.zeros((b, self.nt, 3), np.float32))
+
+    def infer(self, x) -> InferResult:
+        from repro.surrogate.model import predict
+
+        x = jnp.asarray(x)
+        preds = jnp.stack(
+            [predict(m, self.cfg, x, buckets=self.buckets) for m in self.members]
+        )  # [M, B, T, 3]
+        mean = preds.mean(axis=0)
+        if len(self.members) > 1:
+            dev = jnp.sqrt(((preds - mean[None]) ** 2).mean(axis=(0, 2, 3)))
+            ref = jnp.sqrt((mean**2).mean(axis=(1, 2)))
+            score = dev / (ref + 1e-12)
+        else:
+            score = jnp.zeros((x.shape[0],), mean.dtype)
+        return InferResult(
+            y=np.asarray(mean) * self.scale, score=np.asarray(score, np.float64)
+        )
+
+
+# ---------------------------------------------------------------------------
+# LLM decode
+# ---------------------------------------------------------------------------
+
+
+class DecodeEngine:
+    """Batched token generation behind the Engine protocol.
+
+    A request row is one fixed-length prompt ``[prompt_len]`` (int32); the
+    output row is its ``n_new`` generated tokens.  ``serve`` carries the
+    decode knobs — resident vs host-offloaded KV (``kv_offload`` /
+    ``kv_npart``: Algorithm 3 with layer-group attention as the streamed
+    kernel), greedy vs temperature sampling — all realized by
+    :func:`repro.serving.decode.generate`, which is this engine's internal.
+
+    Each ``infer`` pads its batch to a bucket with repeats of the last
+    prompt, so the jitted decode-step shapes are as stable as the
+    surrogate's.  The uncertainty score is 0: greedy/temperature decode has
+    no ensemble to disagree.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        n_new: int = 8,
+        prompt_len: int = 8,
+        serve=None,
+        buckets: Sequence[int] = (4,),
+        kv_schedule: str = "serial",
+        kv_prefetch: int = 1,
+    ):
+        from repro.serving.decode import ServeConfig
+
+        self.cfg = cfg
+        self.params = params
+        self.n_new = int(n_new)
+        self.prompt_len = int(prompt_len)
+        self.serve = serve if serve is not None else ServeConfig()
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.kv_schedule = kv_schedule
+        self.kv_prefetch = int(kv_prefetch)
+        self._sig: Optional[str] = None
+
+    def signature(self) -> str:
+        if self._sig is None:
+            blob = json.dumps(
+                {
+                    "engine": "decode",
+                    "arch": self.cfg.name,
+                    "serve": dataclasses.asdict(self.serve),
+                    "n_new": self.n_new,
+                    "prompt_len": self.prompt_len,
+                    "params": _params_digest([self.params]),
+                },
+                sort_keys=True,
+            )
+            self._sig = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        return self._sig
+
+    def warmup(self) -> None:
+        for b in self.buckets:
+            self.infer(np.zeros((b, self.prompt_len), np.int32))
+
+    def infer(self, x) -> InferResult:
+        from repro.core.stream import pad_kset
+        from repro.serving.decode import generate
+        from repro.surrogate.model import pick_bucket
+
+        x = jnp.asarray(x, jnp.int32)
+        if x.ndim != 2 or x.shape[1] != self.prompt_len:
+            raise ValueError(
+                f"DecodeEngine expects prompts [B, {self.prompt_len}], got {x.shape}"
+            )
+        B = x.shape[0]
+        x, _valid = pad_kset(x, pick_bucket(B, self.buckets))
+        toks = generate(
+            self.params, self.cfg, x, self.n_new, self.serve,
+            kv_schedule=self.kv_schedule, kv_prefetch=self.kv_prefetch,
+        )
+        return InferResult(
+            y=np.asarray(toks[:B, self.prompt_len:]),
+            score=np.zeros((B,), np.float64),
+        )
+
+
+# ---------------------------------------------------------------------------
+# batch-axis sharding wrapper
+# ---------------------------------------------------------------------------
+
+
+class ShardedEngine:
+    """Shard any engine's batch axis over a device mesh.
+
+    Pads the batch to a multiple of the mesh size (``pad_kset`` repeats of
+    the last row), places it with a ``NamedSharding`` over the campaign's
+    1-D case mesh, and lets the inner engine's jitted computation partition
+    under GSPMD.  Scores and outputs are sliced back to the true batch.
+
+    The signature is the *inner* engine's: sharding is an execution detail
+    that must not change results, so sharded and unsharded servers share
+    cache entries (asserted bit-identical in the tests).
+    """
+
+    def __init__(self, inner, device_mesh=None, *, axis: str = "case"):
+        from repro.launch.mesh import make_case_mesh
+
+        self.inner = inner
+        self.mesh = device_mesh if device_mesh is not None else make_case_mesh()
+        self.axis = axis
+        if self.mesh.devices.ndim != 1:
+            raise ValueError(
+                f"ShardedEngine shards one batch axis; got a "
+                f"{self.mesh.devices.ndim}-D mesh {self.mesh.shape}"
+            )
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def buckets(self):
+        return self.inner.buckets
+
+    def signature(self) -> str:
+        return self.inner.signature()
+
+    def warmup(self) -> None:
+        self.inner.warmup()
+
+    def infer(self, x) -> InferResult:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.stream import pad_kset
+
+        x = jnp.asarray(x)
+        B = x.shape[0]
+        x, _valid = pad_kset(x, self.n_devices)
+        spec = P(self.axis, *(None,) * (x.ndim - 1))
+        x = jax.device_put(x, NamedSharding(self.mesh, spec))
+        res = self.inner.infer(x)
+        return InferResult(y=res.y[:B], score=res.score[:B])

@@ -10,6 +10,7 @@ Pure JAX (no flax): params are pytrees, LSTM is a lax.scan.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -114,3 +115,60 @@ def apply(params, cfg: SurrogateConfig, x: jnp.ndarray) -> jnp.ndarray:
 def mae_loss(params, cfg, x, y):
     pred = apply(params, cfg, x)
     return jnp.abs(pred - y).mean()
+
+
+# ---------------------------------------------------------------------------
+# batch-shape-stable inference entry point (shared by serving and the
+# trainer's validation path, so the two can never drift on preprocessing)
+# ---------------------------------------------------------------------------
+
+PREDICT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def pick_bucket(n: int, buckets=PREDICT_BUCKETS) -> int:
+    """Smallest bucket ≥ ``n``; above the largest, the next multiple of it.
+
+    The compiled-shape policy of :func:`predict`: any batch size maps onto a
+    small, fixed set of compiled batch shapes, so steady-state serving
+    traffic never recompiles."""
+    buckets = sorted(buckets)
+    if n < 1:
+        raise ValueError(f"batch must be ≥ 1, got {n}")
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _apply_jit(params, cfg: SurrogateConfig, x):
+    return apply(params, cfg, x)
+
+
+def predict(params, cfg: SurrogateConfig, x, *, buckets=PREDICT_BUCKETS):
+    """Jitted forward pass with canonical pad-to-bucket + mask preprocessing.
+
+    ``x [B,T,3] → ŷ [B,T,3]``.  The batch axis is padded up to a
+    :func:`pick_bucket` size with repeats of the last row (the
+    ``core/stream.pad_kset`` idiom — padded lanes stay numerically
+    well-behaved and are masked off the result); the time axis is
+    zero-padded to a multiple of ``2**n_c`` so the strided encoder /
+    transposed decoder round-trip restores ``T`` exactly.  Every caller —
+    :class:`repro.serving.engine.SurrogateEngine` and the trainer's
+    validation path — goes through here, so serving and training share one
+    preprocessing definition and one set of compiled shapes.
+    """
+    from repro.core.stream import pad_kset
+
+    x = jnp.asarray(x)
+    if x.ndim != 3:
+        raise ValueError(f"predict expects x [B,T,C], got shape {x.shape}")
+    B, T = x.shape[0], x.shape[1]
+    pad_t = (-T) % (2 ** cfg.n_c)
+    if pad_t:
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+    bucket = pick_bucket(B, buckets)
+    x, _valid = pad_kset(x, bucket)
+    y = _apply_jit(params, cfg, x)
+    return y[:B, :T]

@@ -8,6 +8,7 @@ random sampling + successive halving — a faithful, dependency-free stand-in
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 from typing import Any, Optional, Sequence
@@ -16,7 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.surrogate.model import SurrogateConfig, apply, init_params, mae_loss
+from repro.surrogate.model import (
+    SurrogateConfig, apply, init_params, mae_loss, predict,
+)
 
 SEARCH_SPACE = {
     "n_c": [2, 3, 4],
@@ -72,9 +75,11 @@ def fit(
     params = init_params(cfg, jax.random.key(seed))
     step_fn, m, v = _make_adam(cfg, params)
 
-    @jax.jit
+    # validation through the canonical serving entry point (model.predict):
+    # the val batch rides the same pad-to-bucket + jit path SurrogateEngine
+    # serves through, so training and serving cannot drift on preprocessing
     def val_loss(params):
-        return mae_loss(params, cfg, xv, yv)
+        return jnp.abs(predict(params, cfg, xv) - yv).mean()
 
     t0 = time.time()
     hist = []
@@ -175,7 +180,8 @@ def fit_stream(
                 yv_raw = np.concatenate([b for _, b in val_xy])
                 scale = float(np.abs(yv_raw).std() + 1e-12)
                 yv = jnp.asarray(yv_raw) / scale
-                val_loss = jax.jit(lambda p: mae_loss(p, cfg, xv, yv))
+                # same canonical predict path as fit()'s val_loss
+                val_loss = lambda p: jnp.abs(predict(p, cfg, xv) - yv).mean()  # noqa: E731
             continue
         win.append((xk, yk))
         del win[:-window]
@@ -263,6 +269,65 @@ def fit_shards(
     else:
         stream = ShardStream.from_dir(shard_dir)
     return fit_stream(cfg, stream, **kw)
+
+
+def save_surrogate(
+    directory: str,
+    cfg: SurrogateConfig,
+    params,
+    *,
+    scale: float = 1.0,
+    step: int = 0,
+    keep: int = 2,
+) -> str:
+    """Persist a trained surrogate (or an *ensemble* of them) for serving.
+
+    ``params`` is one param pytree or a list of independently-trained
+    members (the serving tier's disagreement signal needs ≥ 2).  Written
+    through :class:`repro.training.checkpoint.CheckpointManager` — atomic,
+    GC'd, the same machinery campaigns trust — with the
+    :class:`~repro.surrogate.model.SurrogateConfig` and MAE-normalization
+    ``scale`` in the manifest ``meta`` so :func:`load_surrogate` (and
+    :meth:`repro.serving.engine.SurrogateEngine.from_checkpoint`) can
+    rebuild the model without side-channel config."""
+    from repro.training.checkpoint import CheckpointManager
+
+    members = list(params) if isinstance(params, (list, tuple)) else [params]
+    if not members:
+        raise ValueError("save_surrogate needs at least one param set")
+    state = {f"member{i}": p for i, p in enumerate(members)}
+    meta = {
+        "surrogate": dataclasses.asdict(cfg),
+        "scale": float(scale),
+        "members": len(members),
+    }
+    CheckpointManager(directory, keep=keep).save(step, state, blocking=True, meta=meta)
+    return directory
+
+
+def load_surrogate(directory: str):
+    """→ ``(cfg, members, scale, step)`` from the newest checkpoint written
+    by :func:`save_surrogate`; raises if the directory holds none."""
+    from repro.training.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(directory)
+    step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no surrogate checkpoint under {directory}")
+    with open(os.path.join(directory, f"step_{step:09d}", "manifest.json")) as f:
+        meta = (json.load(f) or {}).get("meta") or {}
+    if "surrogate" not in meta:
+        raise ValueError(
+            f"checkpoint step {step} under {directory} carries no surrogate "
+            f"meta — written by save_surrogate? (campaign/training "
+            f"checkpoints are not servable models)"
+        )
+    cfg = SurrogateConfig(**meta["surrogate"])
+    n = int(meta.get("members", 1))
+    like = {f"member{i}": init_params(cfg, jax.random.key(0)) for i in range(n)}
+    state = mgr.restore(step, like)
+    members = [state[f"member{i}"] for i in range(n)]
+    return cfg, members, float(meta.get("scale", 1.0)), step
 
 
 def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):

@@ -1,0 +1,417 @@
+"""Serving tier: Engine protocol, microbatcher, result cache, feedback loop.
+
+The acceptance contracts from the serving refactor:
+
+* batched inference is **bit-identical** to per-request inference (row
+  independence + one compiled bucket shape);
+* a repeated scenario is served from the cache without invoking the
+  engine, and the cached result is bit-identical to the computed one;
+* the feedback log round-trips through ``scenario_from_dict`` into a
+  valid compile-grouped ``Plan``;
+* ``temperature=0`` decode is exactly greedy decode (the previously-dead
+  ``ServeConfig.temperature`` field, now live).
+"""
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.scenario.catalog import Scenario, WaveSpec
+from repro.serving import (
+    DecodeEngine, Engine, FeedbackLog, InferResult, MicroBatcher,
+    ResultCache, ShardedEngine, SurrogateEngine, feedback_plan, load_feedback,
+)
+from repro.surrogate.model import (
+    SurrogateConfig, apply, init_params, pick_bucket, predict,
+)
+
+NT = 16
+SCFG = SurrogateConfig(n_c=2, n_lstm=1, latent=8)
+
+
+@pytest.fixture(scope="module")
+def members():
+    return [init_params(SCFG, jax.random.key(s)) for s in (0, 1)]
+
+
+@pytest.fixture(scope="module")
+def engine(members):
+    return SurrogateEngine(SCFG, members, scale=2.0, buckets=(8,), nt=NT)
+
+
+def waves(n, nt=NT, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, nt, 3)).astype(np.float32)
+
+
+class DoublerEngine:
+    """Protocol-conformant fake: y = 2x, score = per-row max.  Counts
+    ``infer`` invocations so cache tests can assert the engine was skipped."""
+
+    def __init__(self, delay_s=0.0):
+        self.calls = 0
+        self.delay_s = delay_s
+
+    def warmup(self):
+        pass
+
+    def signature(self):
+        return "doubler-v1"
+
+    def infer(self, x):
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        x = np.asarray(x)
+        return InferResult(y=2.0 * x, score=x.reshape(x.shape[0], -1).max(1))
+
+
+# ---------------------------------------------------------------------------
+# predict: the shared pad-to-bucket preprocessing
+# ---------------------------------------------------------------------------
+
+
+def test_pick_bucket():
+    assert pick_bucket(1) == 1 and pick_bucket(3) == 4 and pick_bucket(8) == 8
+    assert pick_bucket(65) == 128     # next multiple of the largest bucket
+    assert pick_bucket(200) == 256
+    assert pick_bucket(3, (4,)) == 4 and pick_bucket(9, (4,)) == 12
+
+
+def test_predict_matches_apply_on_aligned_shapes(members):
+    import jax.numpy as jnp
+
+    x = waves(4)  # T=16 already a multiple of 2**n_c, B hits the 4-bucket
+    jit_apply = jax.jit(apply, static_argnums=1)
+    np.testing.assert_array_equal(  # pad + slice is a no-op when aligned
+        np.asarray(predict(members[0], SCFG, x)),
+        np.asarray(jit_apply(members[0], SCFG, jnp.asarray(x))),
+    )
+    np.testing.assert_allclose(     # and agrees with the eager forward
+        np.asarray(predict(members[0], SCFG, x)),
+        np.asarray(apply(members[0], SCFG, x)), atol=1e-6)
+
+
+def test_predict_pads_odd_time_and_batch(members):
+    x = waves(3, nt=13)  # neither axis aligned
+    y = np.asarray(predict(members[0], SCFG, x, buckets=(4,)))
+    assert y.shape == (3, 13, 3)
+    # row independence: within one compiled bucket shape, each row equals
+    # its solo prediction bit-for-bit (different buckets = different XLA
+    # programs = fp noise — which is why serving defaults to one bucket)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            y[i],
+            np.asarray(predict(members[0], SCFG, x[i:i + 1], buckets=(4,)))[0])
+
+
+# ---------------------------------------------------------------------------
+# SurrogateEngine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_is_protocol_instance(engine):
+    assert isinstance(engine, Engine)
+    assert isinstance(DoublerEngine(), Engine)
+
+
+def test_surrogate_engine_mean_and_scale(members, engine):
+    x = waves(2)
+    res = engine.infer(x)
+    ref = np.stack([np.asarray(predict(m, SCFG, x, buckets=(8,)))
+                    for m in members]).mean(0) * 2.0
+    np.testing.assert_array_equal(res.y, ref)
+    assert res.score.shape == (2,) and (res.score >= 0).all()
+
+
+def test_single_member_scores_zero(members):
+    eng = SurrogateEngine(SCFG, members[0], buckets=(4,), nt=NT)
+    assert (eng.infer(waves(2)).score == 0).all()
+
+
+def test_signature_tracks_params_and_scale(members, engine):
+    assert engine.signature() == engine.signature()  # cached + stable
+    resc = SurrogateEngine(SCFG, members, scale=3.0, buckets=(8,), nt=NT)
+    sub = SurrogateEngine(SCFG, members[:1], scale=2.0, buckets=(8,), nt=NT)
+    sigs = {engine.signature(), resc.signature(), sub.signature()}
+    assert len(sigs) == 3
+
+
+def test_batched_equals_per_request_bit_identical(engine):
+    """The tentpole contract: a row's result does not depend on what else
+    rode in its batch (same compiled bucket, row-independent ops)."""
+    x = waves(5)
+    batched = engine.infer(x)
+    for i in range(5):
+        solo = engine.infer(x[i:i + 1])
+        np.testing.assert_array_equal(batched.y[i], solo.y[0])
+        np.testing.assert_array_equal(batched.score[i], solo.score[0])
+
+
+def test_save_load_roundtrip(tmp_path, members, engine):
+    from repro.surrogate.train import save_surrogate
+
+    ckpt = str(tmp_path / "ckpt")
+    save_surrogate(ckpt, SCFG, members, scale=2.0, step=7)
+    eng2 = SurrogateEngine.from_checkpoint(ckpt, buckets=(8,), nt=NT)
+    assert eng2.step == 7 and eng2.scale == 2.0 and len(eng2.members) == 2
+    assert eng2.signature() == engine.signature()  # same model → same cache id
+    x = waves(3)
+    np.testing.assert_array_equal(eng2.infer(x).y, engine.infer(x).y)
+
+
+def test_sharded_engine_identity_and_shared_signature(engine):
+    sh = ShardedEngine(engine)  # 1 host device in CI: pure pass-through
+    x = waves(3)
+    np.testing.assert_array_equal(sh.infer(x).y, engine.infer(x).y)
+    assert sh.signature() == engine.signature()
+
+
+# ---------------------------------------------------------------------------
+# microbatcher
+# ---------------------------------------------------------------------------
+
+
+def test_flush_on_full():
+    eng = DoublerEngine()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=60_000.0) as mb:
+        futs = [mb.submit(f"k{i}", np.full((1, 2), float(i))) for i in range(4)]
+        for i, f in enumerate(futs):
+            r = f.result(timeout=10)
+            np.testing.assert_array_equal(r.y, np.full((1, 2), 2.0 * i))
+            assert not r.cached
+    st = mb.stats()
+    assert st["flush_full"] == 1 and st["flush_timeout"] == 0
+    assert st["batches"] == 1 and eng.calls == 1  # coalesced, not per-request
+
+
+def test_flush_on_timeout():
+    eng = DoublerEngine()
+    with MicroBatcher(eng, max_batch=64, max_wait_ms=30.0) as mb:
+        f = mb.submit("k", np.ones((1, 2)))
+        r = f.result(timeout=10)  # resolves without ever filling the batch
+        assert r.wait_ms >= 25.0
+    st = mb.stats()
+    assert st["flush_timeout"] == 1 and st["flush_full"] == 0
+
+
+def test_close_drains_pending():
+    eng = DoublerEngine()
+    mb = MicroBatcher(eng, max_batch=64, max_wait_ms=60_000.0)
+    f = mb.submit("k", np.ones((1, 2)))
+    mb.close()  # long max-wait: only the drain can resolve this future
+    np.testing.assert_array_equal(f.result(timeout=10).y, 2 * np.ones((1, 2)))
+    assert mb.stats()["flush_drain"] == 1
+    with pytest.raises(RuntimeError):
+        mb.submit("k2", np.ones((1, 2)))
+
+
+def test_engine_error_fails_request_not_loop():
+    class Exploder(DoublerEngine):
+        def infer(self, x):
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("boom")
+            return super().infer(x)
+
+    with MicroBatcher(Exploder(), max_batch=1, max_wait_ms=5.0) as mb:
+        with pytest.raises(RuntimeError, match="boom"):
+            mb.submit("a", np.ones((1, 2))).result(timeout=10)
+        # the loop survived: the next request computes normally
+        assert mb.submit("b", np.ones((1, 2))).result(timeout=10).y[0, 0] == 2.0
+
+
+def test_multirow_requests_split_correctly():
+    with MicroBatcher(DoublerEngine(), max_batch=4, max_wait_ms=60_000.0) as mb:
+        fa = mb.submit("a", np.full((3, 2), 1.0))
+        fb = mb.submit("b", np.full((1, 2), 5.0))
+        ra, rb = fa.result(timeout=10), fb.result(timeout=10)
+    np.testing.assert_array_equal(ra.y, np.full((3, 2), 2.0))
+    np.testing.assert_array_equal(rb.y, np.full((1, 2), 10.0))
+    assert ra.score == 1.0 and rb.score == 5.0  # per-request row max
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_engine_and_is_bit_identical():
+    eng = DoublerEngine()
+    with MicroBatcher(eng, max_batch=1, max_wait_ms=5.0,
+                      cache=ResultCache(8)) as mb:
+        first = mb.submit("k", waves(1)).result(timeout=10)
+        assert not first.cached and eng.calls == 1
+        second = mb.submit("k", waves(1)).result(timeout=10)
+        assert second.cached and eng.calls == 1  # engine never invoked
+        np.testing.assert_array_equal(second.y, first.y)
+        assert second.score == first.score
+    st = mb.stats()
+    assert st["cache_hits"] == 1 and st["cache"]["hits"] == 1
+
+
+def test_cache_keyed_by_engine_signature():
+    class Other(DoublerEngine):
+        def signature(self):
+            return "doubler-v2"
+
+    cache = ResultCache(8)
+    x = np.ones((1, 2))
+    with MicroBatcher(DoublerEngine(), max_batch=1, max_wait_ms=5.0,
+                      cache=cache) as mb:
+        mb.submit("k", x).result(timeout=10)
+    eng2 = Other()
+    with MicroBatcher(eng2, max_batch=1, max_wait_ms=5.0, cache=cache) as mb2:
+        r = mb2.submit("k", x).result(timeout=10)
+    assert not r.cached and eng2.calls == 1  # new model ⇒ stale entry unusable
+
+
+def test_lru_eviction_order():
+    c = ResultCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refresh a → b is now least-recent
+    c.put("c", 3)                   # evicts b
+    assert "b" not in c and c.get("b") is None
+    assert c.keys() == ["a", "c"]   # LRU → MRU
+    st = c.stats()
+    assert st["evictions"] == 1 and st["size"] == 2
+    with pytest.raises(ValueError):
+        ResultCache(0)
+
+
+# ---------------------------------------------------------------------------
+# feedback loop
+# ---------------------------------------------------------------------------
+
+BASE = Scenario(name="fb", wave=WaveSpec(family="ricker"), n_cases=2, nt=NT,
+                mesh_n=(2, 2, 2), nspring=3)
+
+
+def test_feedback_roundtrip_to_plan(tmp_path):
+    path = str(tmp_path / "fb.jsonl")
+    fb = FeedbackLog(path, threshold=0.1)
+    other = dataclasses.replace(BASE, wave=WaveSpec(family="band_noise"))
+    assert fb.observe(BASE, 0.5, key="a")
+    assert not fb.observe(BASE, 0.9)            # duplicate signature
+    assert not fb.observe(other, 0.05)          # below threshold
+    assert not fb.observe("not-a-scenario", 9)  # non-scenario meta
+    assert fb.observe(other, 0.2)
+    assert fb.stats()["routed"] == 2
+
+    loaded = load_feedback(path)
+    assert [s.signature() for s in loaded] == [BASE.signature(),
+                                               other.signature()]
+    plan = feedback_plan(path)
+    assert plan.n_scenarios == 2
+    assert {s.compile_key() for g in plan.groups
+            for s in g.scenarios} == {BASE.compile_key()}
+
+
+def test_feedback_name_collisions_get_signature_suffix(tmp_path):
+    path = str(tmp_path / "fb.jsonl")
+    fb = FeedbackLog(path, threshold=0.0)
+    fb.observe(BASE, 1.0)
+    fb.observe(dataclasses.replace(BASE, seed=9), 1.0)  # same name, new physics
+    names = [s.name for s in load_feedback(path)]
+    assert len(set(names)) == 2 and names[0] == "fb"
+    assert names[1].startswith("fb-")  # shard dirs stay distinct downstream
+
+
+def test_feedback_torn_tail_tolerated_malformed_interior_raises(tmp_path):
+    path = str(tmp_path / "fb.jsonl")
+    FeedbackLog(path, threshold=0.0).observe(BASE, 1.0)
+    with open(path, "a") as f:
+        f.write('{"torn": ')          # killed mid-append
+    assert len(load_feedback(path)) == 1
+    with open(path, "a") as f:
+        f.write("\n")                 # now the torn record is *interior*
+        f.write(json.dumps({"scenario": {}}) + "\n")
+    with pytest.raises(ValueError, match="malformed"):
+        load_feedback(path)
+
+
+def test_feedback_signature_mismatch_raises(tmp_path):
+    path = str(tmp_path / "fb.jsonl")
+    FeedbackLog(path, threshold=0.0).observe(BASE, 1.0)
+    rec = json.loads(open(path).read())
+    rec["scenario"]["seed"] = rec["scenario"]["seed"] + 1  # edit the physics
+    with open(path, "w") as f:
+        f.write(json.dumps(rec) + "\n")
+    with pytest.raises(ValueError, match="hashes to"):
+        load_feedback(path)
+
+
+def test_batcher_routes_high_uncertainty_to_feedback(tmp_path, engine):
+    path = str(tmp_path / "fb.jsonl")
+    with MicroBatcher(engine, max_batch=2, max_wait_ms=5.0,
+                      feedback=FeedbackLog(path, threshold=0.0)) as mb:
+        r = mb.submit(BASE.signature(), waves(2), meta=BASE).result(timeout=60)
+    assert r.score > 0  # two disagreeing members
+    assert os.path.exists(path)
+    plan = feedback_plan(path)  # ends as a valid planner sweep
+    assert plan.n_scenarios == 1
+    assert plan.groups[0].scenarios[0].signature() == BASE.signature()
+
+
+# ---------------------------------------------------------------------------
+# decode: live temperature field + DecodeEngine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm():
+    from repro.configs import ARCHS
+    from repro.models import transformer as T
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params, _ = T.init_params(cfg, jax.random.key(0))
+    prompt = np.asarray(jax.random.randint(
+        jax.random.key(1), (2, 4), 0, cfg.vocab_size), np.int32)
+    return cfg, params, prompt
+
+
+def test_temperature_zero_is_greedy(lm):
+    """Regression for the previously-dead ServeConfig.temperature field."""
+    from repro.serving.decode import ServeConfig, generate, greedy_generate
+
+    cfg, params, prompt = lm
+    g = np.asarray(greedy_generate(params, cfg, prompt, 3))
+    t0 = np.asarray(generate(params, cfg, prompt, 3, ServeConfig(temperature=0.0)))
+    np.testing.assert_array_equal(g, t0)
+    with pytest.raises(ValueError):
+        ServeConfig(temperature=-1.0)
+
+
+def test_sampling_seeded_and_nongreedy():
+    from repro.serving.decode import sample_token
+
+    logits = np.log(np.array([[0.05, 0.5, 0.45]]))
+    k = jax.random.key(0)
+    assert int(sample_token(logits, 0.0, k)[0]) == 1  # exact greedy branch
+    draws = {int(sample_token(logits, 1.0, jax.random.key(s))[0])
+             for s in range(32)}
+    assert len(draws) > 1          # actually samples
+    np.testing.assert_array_equal(  # and deterministically per key
+        np.asarray(sample_token(logits, 1.0, k)),
+        np.asarray(sample_token(logits, 1.0, k)))
+
+
+def test_decode_engine_matches_greedy_and_pads(lm):
+    from repro.serving.decode import greedy_generate
+
+    cfg, params, prompt = lm
+    eng = DecodeEngine(cfg, params, n_new=3, prompt_len=4, buckets=(2,))
+    g = np.asarray(greedy_generate(params, cfg, prompt, 3))[:, 4:]
+    res = eng.infer(prompt)
+    np.testing.assert_array_equal(res.y, g)
+    assert (res.score == 0).all()
+    # a single prompt pads to the 2-bucket and still matches its batched row
+    solo = eng.infer(prompt[:1])
+    np.testing.assert_array_equal(solo.y, g[:1])
+    with pytest.raises(ValueError):
+        eng.infer(prompt[:, :3])  # wrong prompt length
