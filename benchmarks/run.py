@@ -44,8 +44,17 @@ def main() -> None:
     print("\n== §3 NN surrogate ==")
     from benchmarks import nn_surrogate
 
-    info = nn_surrogate.main(n_waves=8, nt=64, steps=300)
+    info = nn_surrogate.main(["--waves", "8", "--nt", "64", "--steps", "300"])
     print(f"nn_surrogate,{info['train_s']*1e6:.0f},val_mae={info['val_mae']:.4f}")
+
+    print("\n== Parallel-in-time trajectory surrogate: scan vs sequential ==")
+    from benchmarks import trajectory_bench
+
+    # full fidelity on purpose (like kernels/scheduler/serving): the
+    # committed BENCH_trajectory.json reports the T ∈ {256,1024,4096}
+    # scan-depth separation — smoke lengths measure dispatch, not depth
+    trajectory_bench.main(["--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_trajectory.json")])
 
     print("\n== Scenario sweep: compile groups + autotuner ==")
     from benchmarks import scenario_bench

@@ -1,0 +1,133 @@
+"""Parallel-in-time trajectory surrogate benchmark: what the associative
+scan and the surrogate each buy.
+
+Two comparisons:
+
+* **scan vs sequential forward** — the identical trajectory-surrogate
+  forward pass (same params, same inputs) executed with the temporal
+  recurrence resolved by ``jax.lax.associative_scan`` (O(log T) depth)
+  vs by ``lax.scan`` (O(T) depth), jitted, across sequence lengths
+  T ∈ {256, 1024, 4096}.  The outputs are tolerance-equal (test-pinned in
+  ``tests/test_trajectory.py``); only the schedule differs, so the ratio
+  is the parallel-in-time speedup at each T.  Honest caveat: the
+  associative scan trades O(T) total work for O(T log T) work at O(log T)
+  depth, so the ratio only exceeds 1 on hardware that can actually spend
+  the parallelism (GPU/TPU); on a CPU both schedules serialize and the
+  extra work shows up as a slowdown — the committed artifact records
+  whatever the measuring host is.
+* **surrogate vs Newmark time-to-history** — wall-clock to produce the
+  full observation history for an ensemble of bedrock waves: the
+  3-D nonlinear FEM campaign (T sequential Newmark steps per case, the
+  paper's workload) vs one associative-scan forward pass of a trained-
+  shape surrogate.  Model quality is the trainer's concern; this measures
+  the *speed class* separation the ISSUE/ROADMAP item promises.
+
+Emits ``name,us_per_call,derived`` CSV lines per the harness contract and
+writes ``BENCH_trajectory.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/trajectory_bench.py [--smoke] \
+        [--out BENCH_trajectory.json] [--batch 8] [--reps 3]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def _bench(fn, reps):
+    """min wall-clock over ``reps`` calls (one warmup/compile call first)."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (measures plumbing, not rates)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    from repro.surrogate import seqmodel
+    from repro.surrogate.dataset import EnsembleConfig, generate
+    from repro.surrogate.seqmodel import TrajectoryConfig
+
+    lengths = (64, 128) if args.smoke else (256, 1024, 4096)
+    cfg = TrajectoryConfig(latent=16 if args.smoke else 32,
+                           state=4 if args.smoke else 8,
+                           n_layers=1 if args.smoke else 2)
+    params = seqmodel.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    # -- scan vs sequential forward, identical params/inputs ----------------
+    @functools.partial(jax.jit, static_argnames="scan")
+    def fwd(x, scan):
+        return seqmodel.apply(params, cfg, x, scan=scan)
+
+    by_T = {}
+    for T in lengths:
+        x = rng.standard_normal((args.batch, T, 3)).astype(np.float32)
+        t_assoc = _bench(lambda: fwd(x, scan="assoc"), args.reps)
+        t_seq = _bench(lambda: fwd(x, scan="seq"), args.reps)
+        by_T[T] = {"assoc_s": t_assoc, "seq_s": t_seq,
+                   "speedup": t_seq / max(t_assoc, 1e-12)}
+        print(f"trajectory_scan_T{T},{t_assoc * 1e6:.0f},"
+              f"seq_us={t_seq * 1e6:.0f};speedup={by_T[T]['speedup']:.2f}x")
+
+    # -- surrogate vs Newmark time-to-history -------------------------------
+    n_waves = 2 if args.smoke else 4
+    nt = 32 if args.smoke else 256
+    ecfg = EnsembleConfig(n_waves=n_waves, nt=nt, mesh_n=(2, 2, 2),
+                          nspring=6, kset=2)
+    t0 = time.perf_counter()
+    waves, _hist = generate(ecfg, trajectories=True, obs_every=1)
+    t_newmark = time.perf_counter() - t0
+
+    t_surr = _bench(
+        lambda: seqmodel.predict(params, cfg, waves, buckets=(n_waves,)),
+        args.reps)
+    speedup = t_newmark / max(t_surr, 1e-12)
+    print(f"trajectory_newmark,{t_newmark / n_waves * 1e6:.0f},"
+          f"cases={n_waves};nt={nt}")
+    print(f"trajectory_surrogate,{t_surr / n_waves * 1e6:.0f},"
+          f"speedup={speedup:.0f}x")
+
+    result = {
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "note": "assoc trades O(T) work for O(T log T) at O(log T) depth; "
+                "speedup > 1 needs parallel hardware (GPU/TPU) — on CPU "
+                "both schedules serialize and the extra work dominates",
+        "batch": args.batch,
+        "model": {"latent": cfg.latent, "state": cfg.state,
+                  "n_layers": cfg.n_layers},
+        "scan_vs_seq": {str(T): v for T, v in by_T.items()},
+        "newmark": {"cases": n_waves, "nt": nt, "wall_s": t_newmark},
+        "surrogate_wall_s": t_surr,
+        "time_to_history_speedup": speedup,
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[trajectory_bench] → {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,13 @@ Flags
     Write completed responses as ``.npz`` dataset shards for the surrogate
     trainer.  Multi-host launches write each process's owned cases under
     ``OUT/p<NN>/``.
+``--trajectories [--obs-every N]``
+    Harvest the full observation time series per case (downsampled by the
+    ``--obs-every`` stride) instead of the CNN surrogate's full-rate
+    target — the training pairs of the parallel-in-time trajectory
+    surrogate (``repro.surrogate.trajectory``).  The shard manifest
+    records ``{"trajectories": true, "obs_every": N}`` so trainers can
+    check the stride.  Plain-campaign path only (not ``--sweep``).
 ``--coordinator / --num-processes / --process-id``
     ``jax.distributed`` topology: process 0's ``host:port`` coordination
     address, world size, and this process's rank.
@@ -193,6 +200,11 @@ def main(argv=None):
                     help="time steps between mid-round checkpoints")
     ap.add_argument("--out", default=None, help="dataset shard directory")
     ap.add_argument("--shard-size", type=int, default=16)
+    ap.add_argument("--trajectories", action="store_true",
+                    help="harvest obs-every-strided response histories "
+                         "(trajectory-surrogate training pairs) into --out")
+    ap.add_argument("--obs-every", type=int, default=1,
+                    help="with --trajectories: record every Nth time step")
     ap.add_argument("--stop-after-steps", type=int, default=None,
                     help="fault injection: exit after this many global steps")
     # multi-host topology (parsed pre-jax-import by parse_distributed; kept
@@ -229,7 +241,12 @@ def main(argv=None):
     n_dev = args.devices or len(jax.devices())
     dmesh = make_case_mesh(n_dev) if n_dev > 1 else None
 
+    if args.trajectories and args.obs_every < 1:
+        raise SystemExit(f"{tag} --obs-every must be ≥ 1, got {args.obs_every}")
     if args.sweep or args.scenario or args.scenarios:
+        if args.trajectories:
+            raise SystemExit(f"{tag} --trajectories rides the plain campaign "
+                             f"path; drop --scenario/--sweep/--scenarios")
         return _run_scenarios(args, tag, np_, dmesh)
 
     cfg = EnsembleConfig(
@@ -277,11 +294,19 @@ def main(argv=None):
              f"{args.waves})" if np_ > 1 and len(y) else "") + stats)
     if args.out:
         out_dir = args.out if np_ == 1 else f"{args.out}/p{pid:02d}"
+        y_out, meta = y, None
+        if args.trajectories:
+            # the trajectory surrogate's target: the same history, strided —
+            # the wave stays full-rate (seqmodel strides it at train time)
+            y_out = y[:, ::args.obs_every]
+            meta = {"trajectories": True, "obs_every": args.obs_every}
         paths = save_shards(
             out_dir, waves[res.case_indices].astype(np.float32),
-            y.astype(np.float32), shard_size=args.shard_size,
+            y_out.astype(np.float32), shard_size=args.shard_size, meta=meta,
         )
-        print(f"{tag} [shards] wrote {len(paths)} shard(s) to {out_dir}")
+        kind = (f"trajectory (obs_every={args.obs_every}) "
+                if args.trajectories else "")
+        print(f"{tag} [shards] wrote {len(paths)} {kind}shard(s) to {out_dir}")
     return 0
 
 

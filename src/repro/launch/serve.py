@@ -1,6 +1,6 @@
 """Serving launcher: batched inference behind the Engine protocol.
 
-Two engines, one serving stack (microbatcher + signature-keyed result
+Three engines, one serving stack (microbatcher + signature-keyed result
 cache + active-learning feedback):
 
     # surrogate: serve a trained FEM surrogate on catalog scenarios
@@ -8,6 +8,11 @@ cache + active-learning feedback):
         --ckpt ckpt/surrogate --scenario ricker-soft-basin \
         --scenario chirp-stiff-shelf --repeat 2 \
         --feedback-out fb.jsonl [--shard --host-devices 4]
+
+    # trajectory: full response histories in one O(log T) associative-scan
+    # forward pass (checkpoint from surrogate.trajectory.save_trajectory)
+    PYTHONPATH=src python -m repro.launch.serve --engine trajectory \
+        --ckpt ckpt/trajectory --scenario ricker-soft-basin --repeat 2
 
     # decode: batched LLM generation, resident or host-offloaded KV
     PYTHONPATH=src python -m repro.launch.serve --engine decode \
@@ -48,7 +53,7 @@ import numpy as np  # noqa: E402
 def _build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="surrogate",
-                    choices=["surrogate", "decode"])
+                    choices=["surrogate", "trajectory", "decode"])
     # serving stack
     ap.add_argument("--max-batch", type=int, default=8,
                     help="flush a microbatch once this many rows are pending")
@@ -138,11 +143,14 @@ def _report(batcher, cache, feedback):
 
 
 def _serve_surrogate(args) -> int:
+    """--engine surrogate / trajectory: both families serve catalog
+    scenarios through the same workload loop — only the engine class (and
+    hence the checkpoint format and output stride) differs."""
     from repro import scenario as sc
-    from repro.serving import SurrogateEngine, feedback_plan
+    from repro.serving import SurrogateEngine, TrajectoryEngine, feedback_plan
 
     if not args.ckpt:
-        print("[serve] --engine surrogate needs --ckpt", file=sys.stderr)
+        print(f"[serve] --engine {args.engine} needs --ckpt", file=sys.stderr)
         return 2
     if args.sweep:
         scenarios = sc.expand(sc.sweep_from_json(args.sweep))
@@ -155,9 +163,10 @@ def _serve_surrogate(args) -> int:
               f"serve them separately", file=sys.stderr)
         return 2
 
-    engine = SurrogateEngine.from_checkpoint(
+    cls = TrajectoryEngine if args.engine == "trajectory" else SurrogateEngine
+    engine = cls.from_checkpoint(
         args.ckpt, buckets=(args.max_batch,), nt=nts.pop())
-    print(f"[serve] surrogate step={engine.step} "
+    print(f"[serve] {args.engine} step={engine.step} "
           f"members={len(engine.members)} scale={engine.scale:.3g} "
           f"signature={engine.signature()}")
 
@@ -233,7 +242,7 @@ def _serve_decode(args) -> int:
 
 def main(argv=None) -> int:
     args = _build_parser().parse_args(argv)
-    if args.engine == "surrogate":
+    if args.engine in ("surrogate", "trajectory"):
         return _serve_surrogate(args)
     return _serve_decode(args)
 

@@ -1,9 +1,10 @@
 """Serving subsystem: generic batched inference over trained models.
 
 ``engine``   the :class:`Engine` protocol (``warmup``/``infer``/
-             ``signature``) with three implementations — the FEM-surrogate
-             forward pass, the KV-offload LLM decode, and a batch-axis
-             device-mesh sharding wrapper.
+             ``signature``) with four implementations — the FEM-surrogate
+             forward pass, the parallel-in-time trajectory surrogate
+             (associative-scan full-history prediction), the KV-offload
+             LLM decode, and a batch-axis device-mesh sharding wrapper.
 ``batcher``  request microbatching: bounded queue, max-batch / max-wait
              flush, pad-to-compiled-shape, per-request latency accounting.
 ``cache``    LRU result cache keyed by (engine signature, request
@@ -20,6 +21,7 @@ from repro.serving.cache import ResultCache  # noqa: F401
 from repro.serving.decode import ServeConfig  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     DecodeEngine, Engine, InferResult, ShardedEngine, SurrogateEngine,
+    TrajectoryEngine,
 )
 from repro.serving.feedback import (  # noqa: F401
     FeedbackLog, feedback_plan, load_feedback, scenario_to_dict,

@@ -176,6 +176,99 @@ class SurrogateEngine:
 
 
 # ---------------------------------------------------------------------------
+# parallel-in-time trajectory surrogate
+# ---------------------------------------------------------------------------
+
+
+class TrajectoryEngine:
+    """Serves the parallel-in-time trajectory surrogate: bedrock wave
+    ``[nt, 3]`` → the full ``obs_every``-strided response history in one
+    O(log T)-depth forward pass (:func:`repro.surrogate.seqmodel.predict`,
+    ``jax.lax.associative_scan`` inside) — no T-step Newmark loop, no
+    O(T)-depth LSTM scan.
+
+    Protocol-identical to :class:`SurrogateEngine` on purpose: same
+    ensemble-mean + disagreement-score ``infer`` contract, same
+    pad-to-bucket preprocessing shared with the trainer's validation path,
+    so :class:`~repro.serving.batcher.MicroBatcher` coalescing,
+    signature-keyed :class:`~repro.serving.cache.ResultCache` hits and
+    :class:`~repro.serving.feedback.FeedbackLog` routing apply unchanged.
+    The signature blob differs (``"engine": "trajectory"`` + the
+    :class:`~repro.surrogate.seqmodel.TrajectoryConfig`), so the two
+    families can never share cache entries.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        scale: float = 1.0,
+        buckets: Sequence[int] = (8,),
+        nt: int = 64,
+        step: int = 0,
+    ):
+        from repro.surrogate.seqmodel import TrajectoryConfig  # noqa: F401 (type)
+
+        self.cfg = cfg
+        self.members = list(params) if isinstance(params, (list, tuple)) else [params]
+        if not self.members:
+            raise ValueError("TrajectoryEngine needs at least one param set")
+        self.scale = float(scale)
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.nt = int(nt)
+        self.step = int(step)
+        self._sig: Optional[str] = None
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, **kw) -> "TrajectoryEngine":
+        """Restore the newest trajectory surrogate written by
+        :func:`repro.surrogate.trajectory.save_trajectory`."""
+        from repro.surrogate.trajectory import load_trajectory
+
+        cfg, members, scale, step = load_trajectory(ckpt_dir)
+        return cls(cfg, members, scale=scale, step=step, **kw)
+
+    # -- protocol -----------------------------------------------------------
+    def signature(self) -> str:
+        if self._sig is None:
+            blob = json.dumps(
+                {
+                    "engine": "trajectory",
+                    "cfg": dataclasses.asdict(self.cfg),
+                    "scale": self.scale,
+                    "members": len(self.members),
+                    "params": _params_digest(self.members),
+                },
+                sort_keys=True,
+            )
+            self._sig = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        return self._sig
+
+    def warmup(self) -> None:
+        for b in self.buckets:
+            self.infer(np.zeros((b, self.nt, 3), np.float32))
+
+    def infer(self, x) -> InferResult:
+        from repro.surrogate.seqmodel import predict
+
+        x = jnp.asarray(x, jnp.float32)
+        preds = jnp.stack(
+            [predict(m, self.cfg, x, buckets=self.buckets) for m in self.members]
+        )  # [M, B, ⌈T/obs_every⌉, 3]
+        mean = preds.mean(axis=0)
+        if len(self.members) > 1:
+            dev = jnp.sqrt(((preds - mean[None]) ** 2).mean(axis=(0, 2, 3)))
+            ref = jnp.sqrt((mean**2).mean(axis=(1, 2)))
+            score = dev / (ref + 1e-12)
+        else:
+            score = jnp.zeros((x.shape[0],), mean.dtype)
+        return InferResult(
+            y=np.asarray(mean) * self.scale, score=np.asarray(score, np.float64)
+        )
+
+
+# ---------------------------------------------------------------------------
 # LLM decode
 # ---------------------------------------------------------------------------
 

@@ -74,15 +74,31 @@ def generate(
     device_mesh=None,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
+    trajectories: bool = False,
+    obs_every: int = 1,
 ):
-    """→ (waves [N,nt,3], responses [N,nt,3] at the max-response point).
+    """→ (waves [N,nt,3], responses at the max-response point).
 
     Cases advance as a :mod:`repro.campaign`: ``cfg.kset`` members per
     device per round (the paper's 2SET, sized by how many state sets fit),
     the case axis sharded over ``device_mesh`` when given, checkpointed into
     ``checkpoint_dir`` so an interrupted generation resumes bit-identically.
     ``n_waves`` need not divide the round size — the tail is padded+masked.
+
+    Two harvesting modes over the same campaign run:
+
+    * default — responses ``[N, nt, 3]``, the CNN surrogate's
+      full-rate target;
+    * ``trajectories=True`` — the observation time series downsampled by
+      the ``obs_every`` stride, ``[N, ⌈nt/obs_every⌉, 3]``, the
+      parallel-in-time trajectory surrogate's target
+      (:mod:`repro.surrogate.seqmodel` with
+      ``TrajectoryConfig(obs_every=obs_every)``).  Pass the pair to
+      :func:`save_shards` with ``meta={"trajectories": True, "obs_every":
+      obs_every}`` so the shard directory self-describes its stride.
     """
+    if obs_every < 1:
+        raise ValueError(f"obs_every must be ≥ 1, got {obs_every}")
     mesh = meshgen.generate(*cfg.mesh_n, pad_elems_to=8)
     sim = simulation_config(cfg)
     waves = random_band_limited_waves(cfg)
@@ -97,6 +113,8 @@ def generate(
         device_mesh=device_mesh,
     )
     responses = res.velocity_history[:, :, 0, :]
+    if trajectories:
+        responses = responses[:, ::obs_every]
     return waves.astype(np.float32), np.asarray(responses).astype(np.float32)
 
 
@@ -105,7 +123,14 @@ def generate(
 # ---------------------------------------------------------------------------
 
 
-def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 16) -> list[str]:
+def save_shards(
+    directory: str,
+    x: np.ndarray,
+    y: np.ndarray,
+    shard_size: int = 16,
+    *,
+    meta: Optional[dict] = None,
+) -> list[str]:
     """Write ``(x, y)`` as ``shard_NNNNN.npz`` files + an index manifest.
 
     Pre-existing ``shard_*.npz`` files are removed first: a rerun with a
@@ -117,7 +142,13 @@ def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 
     ``index.json`` is in-flight (or torn) and invisible to
     :func:`committed` / :meth:`ShardStream.from_cache` readers, so a
     campaign worker can build a scenario's shards in place and publish them
-    with one rename."""
+    with one rename.
+
+    ``meta`` merges extra self-describing keys into the manifest (read
+    back by :func:`shard_meta`) — trajectory harvests record
+    ``{"trajectories": True, "obs_every": k}`` so a trainer can refuse a
+    stride mismatch instead of silently learning the wrong alignment.
+    Reserved keys (``n``/``nt``/``shards``) cannot be overridden."""
     if len(x) != len(y):
         raise ValueError(f"waves/responses length mismatch: {len(x)} vs {len(y)}")
     os.makedirs(directory, exist_ok=True)
@@ -131,11 +162,29 @@ def save_shards(directory: str, x: np.ndarray, y: np.ndarray, shard_size: int = 
         p = os.path.join(directory, f"shard_{s:05d}.npz")
         np.savez(p, x=x[lo : lo + shard_size], y=y[lo : lo + shard_size])
         paths.append(p)
+    record = dict(meta or {})
+    overlap = {"n", "nt", "shards"} & set(record)
+    if overlap:
+        raise ValueError(f"meta may not override reserved index keys {sorted(overlap)}")
+    record.update({"n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths)})
     tmp = index + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({"n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths)}, f)
+        json.dump(record, f)
     os.replace(tmp, index)
     return paths
+
+
+def shard_meta(directory: str) -> dict:
+    """The index manifest of a committed shard directory, verbatim —
+    including any extra keys :func:`save_shards` merged via ``meta``
+    (e.g. the trajectory harvest's ``obs_every`` stride)."""
+    index = os.path.join(directory, "index.json")
+    if not os.path.exists(index):
+        raise FileNotFoundError(
+            f"{directory} has no index.json — not a committed shard directory"
+        )
+    with open(index) as f:
+        return json.load(f)
 
 
 def committed(directory: str) -> bool:

@@ -1,0 +1,269 @@
+"""Parallel-in-time trajectory surrogate: a diagonal-linear state-space
+sequence model trained through ``jax.lax.associative_scan``.
+
+The paper's dual bottleneck is *sequential* time stepping plus the
+state-variable memory wall.  The CNN+LSTM surrogate (:mod:`repro.surrogate.
+model`) already removes the FEM cost per query, but its LSTM core is still
+a ``lax.scan`` — O(T) sequential depth at both training and inference.
+This module is the qualitatively different speed class the ROADMAP calls
+for: every layer's temporal mixing is the **input-dependent diagonal-linear
+recurrence**
+
+    h_t = a_t ⊙ h_{t-1} + b_t,        a_t = exp(Δ_t ⊙ A) ∈ (0, 1)
+
+which is associative, so the whole history resolves in O(log T) depth via
+:func:`jax.lax.associative_scan` (the Mamba/S5 selective-SSM recipe —
+arXiv:2312.00752, arXiv:2405.21060; the selective parameterization below
+follows :mod:`repro.models.ssm`'s conventions at surrogate scale).  The
+same recurrence replayed one step at a time is the **O(1)-state streaming
+decode** (:func:`step`): a serving engine holds one ``[B, H, N]`` state
+per layer and maps bedrock-wave samples to response samples as they
+arrive, never materializing the history.
+
+Three execution paths, one set of params, equivalence test-pinned:
+
+``apply(..., scan="assoc")``   training/full-sequence — O(log T) depth;
+``apply(..., scan="seq")``     the ``lax.scan`` reference (tolerance
+                               oracle for the associative path);
+``step``                       O(1)-state recurrence, bit-equal to the
+                               sequential path per construction.
+
+Pure JAX like the rest of ``surrogate/``: params are pytrees, fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryConfig:
+    """Shape of the trajectory surrogate.
+
+    ``latent``     channel width H of the residual stream;
+    ``state``      diagonal SSM state size N per channel (h is [H, N]);
+    ``n_layers``   stacked selective-SSM blocks;
+    ``obs_every``  trajectory stride: the model maps the bedrock wave
+                   *downsampled by this stride* onto the equally-strided
+                   observation series the campaign harvested
+                   (``dataset.generate(trajectories=True, obs_every=k)``);
+    ``lr``         Adam step size for :func:`repro.surrogate.trajectory.
+                   fit_trajectory`.
+    """
+
+    latent: int = 32
+    state: int = 8
+    n_layers: int = 2
+    in_ch: int = 3
+    out_ch: int = 3
+    obs_every: int = 1
+    lr: float = 3e-4
+
+    def __post_init__(self):
+        if self.obs_every < 1:
+            raise ValueError(f"obs_every must be ≥ 1, got {self.obs_every}")
+
+
+def _dense_init(key, cin, cout):
+    return ((2.0 / cin) ** 0.5) * jax.random.normal(key, (cin, cout), jnp.float32)
+
+
+def init_params(cfg: TrajectoryConfig, key) -> Any:
+    H, N = cfg.latent, cfg.state
+    ks = iter(jax.random.split(key, 6 * cfg.n_layers + 4))
+    p: dict[str, Any] = {
+        "enc": {"w": _dense_init(next(ks), cfg.in_ch, H), "b": jnp.zeros((H,))},
+        "layers": [],
+        "out": {"w": _dense_init(next(ks), H, cfg.out_ch),
+                "b": jnp.zeros((cfg.out_ch,))},
+    }
+    for _ in range(cfg.n_layers):
+        p["layers"].append({
+            # A in (-16, -1): stable decays spread over timescales, the
+            # same spectrum models/ssm.init_mamba2 seeds A_log with
+            "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, N))[None, :],
+                              (H, 1)),
+            "w_dt": _dense_init(next(ks), H, H),
+            "dt_bias": jnp.full((H,), jnp.log(jnp.expm1(1e-1))),
+            "w_B": _dense_init(next(ks), H, N),
+            "w_C": _dense_init(next(ks), H, N),
+            "w_g": _dense_init(next(ks), H, H),
+            "D": jnp.ones((H,)),
+            "norm": jnp.ones((H,)),
+        })
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the scan core: h_t = a_t ⊙ h_{t-1} + b_t, three ways
+# ---------------------------------------------------------------------------
+
+
+def _fold_h0(a, b, h0):
+    """Fold an initial state into the first element: b'_0 = a_0·h_0 + b_0."""
+    if h0 is None:
+        return b
+    return b.at[:, 0].add(a[:, 0] * h0)
+
+
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None
+             ) -> jnp.ndarray:
+    """All states of ``h_t = a_t ⊙ h_{t-1} + b_t`` in O(log T) depth.
+
+    ``a, b [B, T, ...]`` (time axis 1) → ``h [B, T, ...]``.  The recurrence
+    is associative under the composition ``(a₂, b₂) ∘ (a₁, b₁) =
+    (a₁·a₂, a₂·b₁ + b₂)``, so :func:`jax.lax.associative_scan` resolves it
+    in ⌈log₂ T⌉ parallel steps — the parallel-in-time path.  Tolerance-
+    equal (not bit-equal: the combination tree reassociates the products)
+    to :func:`ssm_scan_ref`, pinned by ``tests/test_trajectory.py``.
+    """
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, _fold_h0(a, b, h0)), axis=1)
+    return h
+
+
+def ssm_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                 h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The O(T)-depth ``lax.scan`` reference for :func:`ssm_scan` — exactly
+    the arithmetic :func:`step` replays one step at a time."""
+
+    def one(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    if h0 is None:
+        h0 = jnp.zeros_like(b[:, 0])
+    _, h = jax.lax.scan(one, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return h.swapaxes(0, 1)
+
+
+SCANS = ("assoc", "seq")
+
+
+# ---------------------------------------------------------------------------
+# the selective-SSM block
+# ---------------------------------------------------------------------------
+
+
+def _layer_ab(p, v):
+    """Input-dependent recurrence coefficients of one block.
+
+    ``v [..., H]`` (pre-normed stream) → ``(a, b) [..., H, N]`` plus the
+    selective readout ``C [..., N]`` and the gate input — shared verbatim
+    by the full-sequence path and :func:`step` so the two cannot drift."""
+    dt = jax.nn.softplus(v @ p["w_dt"] + p["dt_bias"])        # [..., H]
+    A = -jnp.exp(p["A_log"])                                  # [H, N]
+    a = jnp.exp(dt[..., None] * A)                            # [..., H, N]
+    Bv = v @ p["w_B"]                                         # [..., N]
+    b = (dt * v)[..., None] * Bv[..., None, :]                # [..., H, N]
+    C = v @ p["w_C"]                                          # [..., N]
+    return a, b, C
+
+
+def _layer_out(p, v, h, C):
+    """State → block output: selective readout + skip, silu-gated."""
+    y = (h * C[..., None, :]).sum(-1) + p["D"] * v
+    return y * jax.nn.silu(v @ p["w_g"])
+
+
+def apply(params, cfg: TrajectoryConfig, x: jnp.ndarray, *,
+          scan: str = "assoc") -> jnp.ndarray:
+    """Full-sequence forward: wave samples ``x [B, T, in_ch]`` →
+    trajectory ``ŷ [B, T, out_ch]`` (same stride as the input — callers
+    holding full-rate waves go through :func:`predict`, which applies
+    ``cfg.obs_every``).  ``scan`` picks the temporal executor from
+    :data:`SCANS`; params and outputs are executor-independent within
+    tolerance."""
+    if scan not in SCANS:
+        raise ValueError(f"scan must be one of {SCANS}, got {scan!r}")
+    run = ssm_scan if scan == "assoc" else ssm_scan_ref
+    u = x @ params["enc"]["w"] + params["enc"]["b"]
+    for p in params["layers"]:
+        v = rmsnorm(u, p["norm"])
+        a, b, C = _layer_ab(p, v)
+        h = run(a, b)
+        u = u + _layer_out(p, v, h, C)
+    return u @ params["out"]["w"] + params["out"]["b"]
+
+
+def init_state(cfg: TrajectoryConfig, batch: int) -> list[jnp.ndarray]:
+    """Zero streaming state: one diagonal-SSM state per layer — the whole
+    memory of an in-flight trajectory, O(1) in its length."""
+    return [jnp.zeros((batch, cfg.latent, cfg.state), jnp.float32)
+            for _ in range(cfg.n_layers)]
+
+
+def step(params, cfg: TrajectoryConfig, x_t: jnp.ndarray,
+         state: list[jnp.ndarray]) -> tuple[jnp.ndarray, list[jnp.ndarray]]:
+    """One streaming step: ``x_t [B, in_ch]`` + per-layer states →
+    ``(ŷ_t [B, out_ch], new_state)``.
+
+    Replays exactly the sequential recurrence of ``apply(..., scan="seq")``
+    — feeding a wave sample-by-sample reproduces the full-sequence output
+    (test-pinned), with memory independent of how long the trajectory has
+    been running.  This is what :class:`repro.serving.engine.
+    TrajectoryEngine` would hold per live stream."""
+    u = x_t @ params["enc"]["w"] + params["enc"]["b"]
+    new_state = []
+    for p, h_prev in zip(params["layers"], state):
+        v = rmsnorm(u, p["norm"])
+        a, b, C = _layer_ab(p, v)
+        h = a * h_prev + b
+        new_state.append(h)
+        u = u + _layer_out(p, v, h, C)
+    return u @ params["out"]["w"] + params["out"]["b"], new_state
+
+
+def mae_loss(params, cfg: TrajectoryConfig, x, y):
+    """MAE over the strided trajectory: ``x`` is the *full-rate* wave as
+    harvested (``[B, nt, in_ch]``), ``y`` the ``obs_every``-strided
+    observation series — the shard format ``dataset.generate(
+    trajectories=True)`` commits."""
+    pred = apply(params, cfg, x[:, :: cfg.obs_every])
+    return jnp.abs(pred - y[:, : pred.shape[1]]).mean()
+
+
+# ---------------------------------------------------------------------------
+# batch-shape-stable inference entry point (mirrors surrogate.model.predict)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def _apply_jit(params, cfg: TrajectoryConfig, x, scan: str):
+    return apply(params, cfg, x, scan=scan)
+
+
+def predict(params, cfg: TrajectoryConfig, x, *, buckets=None,
+            scan: str = "assoc"):
+    """Jitted full-history prediction with the canonical pad-to-bucket
+    preprocessing: full-rate wave ``x [B, nt, in_ch]`` → trajectory
+    ``ŷ [B, ⌈nt/obs_every⌉, out_ch]``.
+
+    The batch axis pads to a :func:`repro.surrogate.model.pick_bucket`
+    size with repeats of the last row (padded lanes masked off), so
+    serving traffic holds one compiled shape per (bucket, nt) — the same
+    contract as the CNN surrogate's ``predict``, which is what lets
+    :class:`~repro.serving.engine.TrajectoryEngine` assert batched ≡
+    per-request bit-identity."""
+    from repro.core.stream import pad_kset
+    from repro.surrogate.model import PREDICT_BUCKETS, pick_bucket
+
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 3:
+        raise ValueError(f"predict expects x [B,T,C], got shape {x.shape}")
+    B = x.shape[0]
+    x = x[:, :: cfg.obs_every]
+    x, _valid = pad_kset(x, pick_bucket(B, buckets or PREDICT_BUCKETS))
+    return _apply_jit(params, cfg, x, scan)[:B]

@@ -2,8 +2,12 @@
 
 The paper tunes (n_c, n_lstm, kernel, latent, lr) with Optuna; Optuna is
 not available offline so :func:`search` runs the same search space with
-random sampling + successive halving — a faithful, dependency-free stand-in
-(documented deviation).
+pure random sampling — a dependency-free stand-in (documented deviation).
+Batch training lives in :func:`fit` (in-memory pairs), :func:`fit_stream`
+(shards as a campaign commits them), and :func:`fit_shards` (a committed
+shard directory, streamed in plan order); all three take a pluggable
+``model`` module, so the CNN surrogate and the parallel-in-time trajectory
+surrogate (:mod:`repro.surrogate.seqmodel`) share one optimizer path.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.surrogate import model as _cnn
 from repro.surrogate.model import (
     SurrogateConfig, apply, init_params, mae_loss, predict,
 )
@@ -30,16 +35,21 @@ SEARCH_SPACE = {
 }
 
 
-def _make_adam(cfg: SurrogateConfig, params):
+def _make_adam(cfg, params, loss_fn=None):
     """(step_fn, m0, v0): the jitted Adam+MAE update shared by :func:`fit`
     and :func:`fit_stream` — identical math, so a streamed run that sees
-    the same batch sequence reproduces the offline run exactly."""
+    the same batch sequence reproduces the offline run exactly.
+
+    ``loss_fn(params, cfg, xb, yb)`` defaults to the CNN surrogate's MAE;
+    the trajectory surrogate (:mod:`repro.surrogate.trajectory`) rides the
+    same update with :func:`repro.surrogate.seqmodel.mae_loss`."""
+    loss_fn = mae_loss if loss_fn is None else loss_fn
     m = jax.tree_util.tree_map(jnp.zeros_like, params)
     v = jax.tree_util.tree_map(jnp.zeros_like, params)
 
     @jax.jit
     def step_fn(params, m, v, t, xb, yb):
-        loss, g = jax.value_and_grad(mae_loss)(params, cfg, xb, yb)
+        loss, g = jax.value_and_grad(loss_fn)(params, cfg, xb, yb)
         b1, b2, eps = 0.9, 0.999, 1e-8
         m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
         v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
@@ -54,16 +64,23 @@ def _make_adam(cfg: SurrogateConfig, params):
 
 
 def fit(
-    cfg: SurrogateConfig,
+    cfg,
     x: np.ndarray,  # [N,T,3] input waves
-    y: np.ndarray,  # [N,T,3] responses
+    y: np.ndarray,  # [N,T,3] responses ([N,T/obs_every,3] for trajectories)
     *,
     steps: int = 200,
     batch: int = 4,
     val_frac: float = 0.25,
     seed: int = 0,
     verbose: bool = False,
+    model=None,
 ) -> tuple[Any, dict]:
+    """Adam + MAE on in-memory pairs.  ``model`` is the module providing
+    ``init_params/mae_loss/predict`` — the CNN surrogate
+    (:mod:`repro.surrogate.model`, default) or the parallel-in-time
+    trajectory surrogate (:mod:`repro.surrogate.seqmodel`); both engines
+    restore the returned params for serving."""
+    model = _cnn if model is None else model
     rng = np.random.default_rng(seed)
     n_val = max(1, int(len(x) * val_frac))
     xv, yv = jnp.asarray(x[:n_val]), jnp.asarray(y[:n_val])
@@ -72,14 +89,15 @@ def fit(
     scale = float(np.abs(y[n_val:]).std() + 1e-12)
     yt, yv = yt / scale, yv / scale
 
-    params = init_params(cfg, jax.random.key(seed))
-    step_fn, m, v = _make_adam(cfg, params)
+    params = model.init_params(cfg, jax.random.key(seed))
+    step_fn, m, v = _make_adam(cfg, params, model.mae_loss)
 
     # validation through the canonical serving entry point (model.predict):
-    # the val batch rides the same pad-to-bucket + jit path SurrogateEngine
-    # serves through, so training and serving cannot drift on preprocessing
+    # the val batch rides the same pad-to-bucket + jit path the serving
+    # engine serves through, so training and serving cannot drift on
+    # preprocessing
     def val_loss(params):
-        return jnp.abs(predict(params, cfg, xv) - yv).mean()
+        return jnp.abs(model.predict(params, cfg, xv) - yv).mean()
 
     t0 = time.time()
     hist = []
@@ -101,7 +119,7 @@ def fit(
 
 
 def fit_stream(
-    cfg: SurrogateConfig,
+    cfg,
     shards,  # ShardStream (or any re-iterable of (x, y) shard pairs)
     *,
     steps: int = 200,
@@ -111,6 +129,7 @@ def fit_stream(
     window: int = 8,
     seed: int = 0,
     verbose: bool = False,
+    model=None,
 ) -> tuple[Any, dict]:
     """Train on a shard stream *while it is still being produced*.
 
@@ -138,10 +157,16 @@ def fit_stream(
     Returns ``(params, info)`` with :func:`fit`-compatible ``info`` keys
     plus ``n_shards`` and ``stream_wait_s`` (time blocked on uncommitted
     shards — the overlap telemetry the scheduler bench reports).
+
+    ``model`` selects the surrogate family exactly as in :func:`fit` —
+    trajectory shards (``dataset.generate(trajectories=True)``) stream
+    through here with :mod:`repro.surrogate.seqmodel` while the campaign
+    is still producing them.
     """
+    model = _cnn if model is None else model
     rng = np.random.default_rng(seed)
-    params = init_params(cfg, jax.random.key(seed))
-    step_fn, m, v = _make_adam(cfg, params)
+    params = model.init_params(cfg, jax.random.key(seed))
+    step_fn, m, v = _make_adam(cfg, params, model.mae_loss)
 
     t0 = time.time()
     hist = []
@@ -181,7 +206,7 @@ def fit_stream(
                 scale = float(np.abs(yv_raw).std() + 1e-12)
                 yv = jnp.asarray(yv_raw) / scale
                 # same canonical predict path as fit()'s val_loss
-                val_loss = lambda p: jnp.abs(predict(p, cfg, xv) - yv).mean()  # noqa: E731
+                val_loss = lambda p: jnp.abs(model.predict(p, cfg, xv) - yv).mean()  # noqa: E731
             continue
         win.append((xk, yk))
         del win[:-window]
@@ -226,7 +251,7 @@ def fit_stream(
 
 
 def fit_shards(
-    cfg: SurrogateConfig,
+    cfg,
     shard_dir: str,
     *,
     order: Optional[Sequence[str]] = None,
@@ -331,7 +356,19 @@ def load_surrogate(directory: str):
 
 
 def search(x, y, *, trials: int = 4, steps: int = 120, seed: int = 0, latent_cap: int = 128):
-    """Random search over the paper's space; returns best (cfg, params, info)."""
+    """Random search over the paper's (n_c, n_lstm, kernel, latent, lr)
+    space; returns the best ``(cfg, params, info)`` by validation MAE.
+
+    Each trial is a full :func:`fit` on the **in-memory** ``(x, y)`` pair —
+    the pooled output of :func:`repro.surrogate.dataset.load_shards` or
+    :func:`~repro.surrogate.dataset.generate_sweep`.  Search predates the
+    PR-6 streaming path on purpose: a hyperparameter sweep re-reads the
+    same small dataset ``trials`` times, so materializing it once beats
+    streaming it per trial.  For training-sized datasets, pick a config
+    here at subset scale and hand it to :func:`fit_shards` /
+    :func:`fit_stream`, which keep peak host memory at O(shard) and
+    consume shards in plan order (live ≡ post-hoc batch sequences —
+    see the :func:`fit_shards` order contract)."""
     rng = np.random.default_rng(seed)
     best = None
     for t in range(trials):

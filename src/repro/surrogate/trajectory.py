@@ -1,0 +1,116 @@
+"""Training/persistence entry points for the parallel-in-time trajectory
+surrogate (:mod:`repro.surrogate.seqmodel`).
+
+Deliberately thin: every function here is the corresponding CNN-surrogate
+entry point from :mod:`repro.surrogate.train` with the trajectory model
+plugged in, so the two surrogate families share one Adam update
+(``train._make_adam``), one streaming loop (``train.fit_stream``), one
+shard-order contract (``train.fit_shards``), and one checkpoint layout
+(:class:`repro.training.checkpoint.CheckpointManager`).  The only
+trajectory-specific choice is the manifest key (``"trajectory"`` instead
+of ``"surrogate"``), which is what keeps :func:`load_trajectory` and
+``train.load_surrogate`` from silently restoring each other's params into
+the wrong architecture.
+
+Data flow: ``dataset.generate(trajectories=True, obs_every=k)`` (or
+``launch/campaign.py --trajectories``) harvests ``(wave [N, nt, 3],
+history [N, ⌈nt/k⌉, 3])`` pairs; :func:`fit_trajectory_shards` streams
+them; :func:`save_trajectory` commits the result;
+:class:`repro.serving.engine.TrajectoryEngine` serves it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+
+from repro.surrogate import seqmodel
+from repro.surrogate import train as _train
+from repro.surrogate.seqmodel import TrajectoryConfig
+
+
+def fit_trajectory(cfg: TrajectoryConfig, x, y, **kw) -> tuple[Any, dict]:
+    """Adam + MAE on in-memory ``(wave, strided-history)`` pairs — the
+    trajectory instantiation of :func:`repro.surrogate.train.fit`.
+
+    ``x [N, nt, 3]`` full-rate bedrock waves, ``y [N, ⌈nt/obs_every⌉, 3]``
+    observation series harvested at ``cfg.obs_every`` stride (the shapes
+    ``dataset.generate(trajectories=True)`` returns).  The forward pass
+    trains through :func:`jax.lax.associative_scan` — O(log T) depth per
+    step instead of the LSTM surrogate's O(T)."""
+    return _train.fit(cfg, x, y, model=seqmodel, **kw)
+
+
+def fit_trajectory_stream(cfg: TrajectoryConfig, shards, **kw):
+    """Train on trajectory shards *while a campaign is still producing
+    them* — :func:`repro.surrogate.train.fit_stream` with the trajectory
+    model; same determinism contract (batch sequence is a pure function of
+    stream order and seed, never arrival timing)."""
+    return _train.fit_stream(cfg, shards, model=seqmodel, **kw)
+
+
+def fit_trajectory_shards(cfg: TrajectoryConfig, shard_dir: str, **kw):
+    """:func:`fit_trajectory_stream` over a committed shard directory,
+    resolved in plan order exactly as
+    :func:`repro.surrogate.train.fit_shards` documents."""
+    return _train.fit_shards(cfg, shard_dir, model=seqmodel, **kw)
+
+
+def save_trajectory(
+    directory: str,
+    cfg: TrajectoryConfig,
+    params,
+    *,
+    scale: float = 1.0,
+    step: int = 0,
+    keep: int = 2,
+) -> str:
+    """Persist a trained trajectory surrogate (or ensemble) for serving.
+
+    Mirrors :func:`repro.surrogate.train.save_surrogate` byte-for-byte in
+    layout — atomic :class:`~repro.training.checkpoint.CheckpointManager`
+    step with ``member{i}`` param trees — but stamps the manifest meta with
+    ``"trajectory"`` so the loaders can tell the families apart."""
+    from repro.training.checkpoint import CheckpointManager
+
+    members = list(params) if isinstance(params, (list, tuple)) else [params]
+    if not members:
+        raise ValueError("save_trajectory needs at least one param set")
+    state = {f"member{i}": p for i, p in enumerate(members)}
+    meta = {
+        "trajectory": dataclasses.asdict(cfg),
+        "scale": float(scale),
+        "members": len(members),
+    }
+    CheckpointManager(directory, keep=keep).save(step, state, blocking=True, meta=meta)
+    return directory
+
+
+def load_trajectory(directory: str):
+    """→ ``(cfg, members, scale, step)`` from the newest checkpoint written
+    by :func:`save_trajectory`; refuses checkpoints of other provenance
+    (CNN-surrogate or campaign state) rather than mis-restoring them."""
+    from repro.training.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(directory)
+    step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no trajectory checkpoint under {directory}")
+    with open(os.path.join(directory, f"step_{step:09d}", "manifest.json")) as f:
+        meta = (json.load(f) or {}).get("meta") or {}
+    if "trajectory" not in meta:
+        raise ValueError(
+            f"checkpoint step {step} under {directory} carries no trajectory "
+            f"meta — written by save_trajectory? (CNN-surrogate and campaign "
+            f"checkpoints are not trajectory models)"
+        )
+    cfg = TrajectoryConfig(**meta["trajectory"])
+    n = int(meta.get("members", 1))
+    like = {f"member{i}": seqmodel.init_params(cfg, jax.random.key(0))
+            for i in range(n)}
+    state = mgr.restore(step, like)
+    members = [state[f"member{i}"] for i in range(n)]
+    return cfg, members, float(meta.get("scale", 1.0)), step

@@ -218,6 +218,39 @@ def test_ssd_chunked_equals_recurrence(chunk):
 
 
 # ---------------------------------------------------------------------------
+# mamba2_block: full-sequence (chunked SSD) == cached step() decode — the
+# block-level contract (conv cache + SSD state together), a prerequisite
+# for reusing its recurrence conventions in surrogate/seqmodel.py
+# ---------------------------------------------------------------------------
+
+
+def test_mamba2_block_full_equals_cached_decode():
+    from repro.models.ssm import init_mamba2, init_ssm_cache, mamba2_block
+
+    cfg = ARCHS["mamba2-780m"].reduced()
+    params, _ = init_mamba2(KEY, cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.1, jnp.float32)
+
+    y_full, cache_full = mamba2_block(params, x, cfg, return_state=True)
+
+    cache = init_ssm_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, cache = mamba2_block(params, x[:, t : t + 1], cfg, cache=cache)
+        ys.append(y_t[:, 0])
+    y_step = jnp.stack(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(cache["ssm"]),
+                               np.asarray(cache_full["ssm"]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(cache["conv"]),
+                               np.asarray(cache_full["conv"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # abstract init: dry-run path allocates nothing, matches real shapes
 # ---------------------------------------------------------------------------
 

@@ -23,7 +23,8 @@ import pytest
 from repro.scenario.catalog import Scenario, WaveSpec
 from repro.serving import (
     DecodeEngine, Engine, FeedbackLog, InferResult, MicroBatcher,
-    ResultCache, ShardedEngine, SurrogateEngine, feedback_plan, load_feedback,
+    ResultCache, ShardedEngine, SurrogateEngine, TrajectoryEngine,
+    feedback_plan, load_feedback,
 )
 from repro.surrogate.model import (
     SurrogateConfig, apply, init_params, pick_bucket, predict,
@@ -169,6 +170,89 @@ def test_sharded_engine_identity_and_shared_signature(engine):
     x = waves(3)
     np.testing.assert_array_equal(sh.infer(x).y, engine.infer(x).y)
     assert sh.signature() == engine.signature()
+
+
+# ---------------------------------------------------------------------------
+# TrajectoryEngine: same serving contracts, parallel-in-time model
+# ---------------------------------------------------------------------------
+
+
+def _traj_engine(n_members=2, **kw):
+    from repro.surrogate.seqmodel import TrajectoryConfig, init_params
+
+    cfg = TrajectoryConfig(latent=8, state=4, n_layers=1, obs_every=2)
+    members = [init_params(cfg, jax.random.key(s)) for s in range(n_members)]
+    kw.setdefault("buckets", (8,))
+    kw.setdefault("nt", NT)
+    return TrajectoryEngine(cfg, members, scale=2.0, **kw)
+
+
+def test_trajectory_engine_protocol_and_stride():
+    eng = _traj_engine()
+    assert isinstance(eng, Engine)
+    res = eng.infer(waves(2))
+    assert res.y.shape == (2, NT // 2, 3)   # obs_every=2 strides the output
+    assert res.score.shape == (2,) and (res.score >= 0).all()
+    assert (_traj_engine(n_members=1).infer(waves(2)).score == 0).all()
+
+
+def test_trajectory_batched_equals_per_request_bit_identical():
+    eng = _traj_engine()
+    x = waves(5)
+    batched = eng.infer(x)
+    for i in range(5):
+        solo = eng.infer(x[i:i + 1])
+        np.testing.assert_array_equal(batched.y[i], solo.y[0])
+        np.testing.assert_array_equal(batched.score[i], solo.score[0])
+
+
+def test_trajectory_cache_hit_skips_engine():
+    class Counting:
+        def __init__(self, inner):
+            self.inner, self.calls = inner, 0
+
+        def warmup(self):
+            pass
+
+        def signature(self):
+            return self.inner.signature()
+
+        def infer(self, x):
+            self.calls += 1
+            return self.inner.infer(x)
+
+    eng = Counting(_traj_engine())
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=2.0,
+                      cache=ResultCache(8)) as mb:
+        r1 = mb.submit("k", waves(1)).result(timeout=60)
+        r2 = mb.submit("k", waves(1)).result(timeout=60)
+    assert eng.calls == 1 and not r1.cached and r2.cached
+    np.testing.assert_array_equal(r1.y, r2.y)
+
+
+def test_trajectory_signature_distinct_from_surrogate(engine):
+    eng = _traj_engine()
+    assert eng.signature() != engine.signature()
+    assert eng.signature() == eng.signature()
+    # params change → signature change (cache can never serve stale model)
+    other = _traj_engine(n_members=1)
+    assert other.signature() != eng.signature()
+
+
+def test_trajectory_checkpoint_roundtrip(tmp_path):
+    from repro.surrogate.seqmodel import TrajectoryConfig, init_params
+    from repro.surrogate.trajectory import save_trajectory
+
+    cfg = TrajectoryConfig(latent=8, state=4, n_layers=1, obs_every=2)
+    members = [init_params(cfg, jax.random.key(s)) for s in (0, 1)]
+    ckpt = str(tmp_path / "ckpt")
+    save_trajectory(ckpt, cfg, members, scale=2.0, step=5)
+    eng = TrajectoryEngine.from_checkpoint(ckpt, buckets=(8,), nt=NT)
+    assert eng.step == 5 and eng.scale == 2.0 and len(eng.members) == 2
+    ref = TrajectoryEngine(cfg, members, scale=2.0, buckets=(8,), nt=NT)
+    assert eng.signature() == ref.signature()
+    x = waves(3)
+    np.testing.assert_array_equal(eng.infer(x).y, ref.infer(x).y)
 
 
 # ---------------------------------------------------------------------------

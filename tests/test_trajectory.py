@@ -1,0 +1,226 @@
+"""Parallel-in-time trajectory surrogate: scan equivalence + subsystem.
+
+The acceptance contracts of the trajectory subsystem:
+
+* the ``associative_scan`` recurrence is tolerance-equal (atol ≤ 1e-5) to
+  the ``lax.scan`` reference on the same params/inputs — the parallel-in-
+  time path computes the *same* trajectory, only in O(log T) depth;
+* ``step()`` replays the sequential path exactly: feeding a wave sample-
+  by-sample with O(1) state reproduces the full-sequence output;
+* trajectory harvesting (``generate(trajectories=True)``) commits strided
+  observation series through the same shard machinery the CNN surrogate
+  streams, with a self-describing manifest;
+* ``fit_trajectory`` / ``save`` / ``load`` ride the shared optimizer and
+  checkpoint machinery and round-trip exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.surrogate import seqmodel
+from repro.surrogate.seqmodel import (
+    SCANS, TrajectoryConfig, apply, init_params, init_state, predict,
+    ssm_scan, ssm_scan_ref, step,
+)
+
+CFG = TrajectoryConfig(latent=8, state=4, n_layers=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.key(0))
+
+
+def waves(n, nt, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, nt, 3)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the scan core
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [1, 2, 7, 64, 129])
+def test_associative_scan_equals_lax_scan_reference(T):
+    """The acceptance pin: assoc and seq resolve the same recurrence to
+    atol ≤ 1e-5 on the same inputs, at every length (incl. non-powers of
+    two, where the combination tree is ragged)."""
+    rng = np.random.default_rng(T)
+    a = jnp.asarray(rng.uniform(0.1, 0.999, size=(2, T, 4, 3)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, T, 4, 3)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ssm_scan(a, b)), np.asarray(ssm_scan_ref(a, b)),
+        atol=1e-5)
+
+
+def test_scan_initial_state_folds_in():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.uniform(0.1, 0.999, size=(2, 9, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 9, 4)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ssm_scan(a, b, h0)), np.asarray(ssm_scan_ref(a, b, h0)),
+        atol=1e-5)
+
+
+def test_scan_split_stream_equals_full():
+    """Folding the state across a split point equals the unsplit scan —
+    the property that makes O(1)-state streaming possible at all."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.uniform(0.1, 0.999, size=(1, 12, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, 12, 4)), jnp.float32)
+    full = ssm_scan_ref(a, b)
+    head = ssm_scan_ref(a[:, :5], b[:, :5])
+    tail = ssm_scan_ref(a[:, 5:], b[:, 5:], h0=head[:, -1])
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([head, tail], axis=1)),
+        np.asarray(full), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the model: three execution paths, one function
+# ---------------------------------------------------------------------------
+
+
+def test_apply_assoc_equals_seq(params):
+    x = waves(2, 33)
+    ya = np.asarray(apply(params, CFG, x, scan="assoc"))
+    ys = np.asarray(apply(params, CFG, x, scan="seq"))
+    np.testing.assert_allclose(ya, ys, atol=5e-5)
+
+
+def test_apply_rejects_unknown_scan(params):
+    with pytest.raises(ValueError, match="scan must be one of"):
+        apply(params, CFG, waves(1, 4), scan="magic")
+    assert SCANS == ("assoc", "seq")
+
+
+def test_step_replays_sequential_path(params):
+    """O(1)-state streaming decode ≡ full-sequence forward: the serving
+    engine can hold one [B,H,N] state per layer instead of the history."""
+    x = waves(2, 17)
+    full = np.asarray(apply(params, CFG, x, scan="seq"))
+    state = init_state(CFG, 2)
+    outs = []
+    for t in range(x.shape[1]):
+        y_t, state = step(params, CFG, jnp.asarray(x[:, t]), state)
+        outs.append(np.asarray(y_t))
+    np.testing.assert_allclose(np.stack(outs, axis=1), full, atol=1e-5)
+
+
+def test_predict_strides_and_masks_padding(params):
+    cfg = TrajectoryConfig(latent=8, state=4, n_layers=2, obs_every=4)
+    x = waves(3, 32)
+    y = np.asarray(predict(params, cfg, x, buckets=(4,)))
+    assert y.shape == (3, 8, 3)
+    # row independence within one compiled bucket (the serving contract)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            y[i], np.asarray(predict(params, cfg, x[i:i + 1], buckets=(4,)))[0])
+
+
+def test_config_validates_stride():
+    with pytest.raises(ValueError, match="obs_every"):
+        TrajectoryConfig(obs_every=0)
+
+
+# ---------------------------------------------------------------------------
+# harvesting: trajectories=True through the shard machinery
+# ---------------------------------------------------------------------------
+
+
+def test_generate_trajectories_strides_history():
+    from repro.surrogate.dataset import EnsembleConfig, generate
+
+    ecfg = EnsembleConfig(n_waves=2, nt=16, mesh_n=(2, 2, 2), nspring=6)
+    x_full, y_full = generate(ecfg)
+    x_tr, y_tr = generate(ecfg, trajectories=True, obs_every=4)
+    np.testing.assert_array_equal(x_tr, x_full)     # wave stays full-rate
+    assert y_tr.shape == (2, 4, 3)
+    np.testing.assert_array_equal(y_tr, y_full[:, ::4])
+    with pytest.raises(ValueError, match="obs_every"):
+        generate(ecfg, trajectories=True, obs_every=0)
+
+
+def test_save_shards_meta_roundtrip(tmp_path):
+    from repro.surrogate.dataset import save_shards, shard_meta
+
+    d = str(tmp_path / "shards")
+    x, y = waves(6, 8), waves(6, 2, seed=1)
+    save_shards(d, x, y, shard_size=3,
+                meta={"trajectories": True, "obs_every": 4})
+    m = shard_meta(d)
+    assert m["trajectories"] is True and m["obs_every"] == 4
+    assert m["n"] == 6 and m["shards"] == 2
+    with pytest.raises(ValueError, match="reserved"):
+        save_shards(d, x, y, meta={"n": 99})
+    with pytest.raises(FileNotFoundError):
+        shard_meta(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# training + persistence on the shared machinery
+# ---------------------------------------------------------------------------
+
+
+def test_fit_trajectory_learns_and_roundtrips(tmp_path):
+    from repro.surrogate.trajectory import (
+        fit_trajectory, load_trajectory, save_trajectory,
+    )
+
+    cfg = TrajectoryConfig(latent=8, state=4, n_layers=1, obs_every=2,
+                           lr=1e-2)
+    x = waves(8, 16)
+    y = x[:, ::2] * 0.5  # a linear strided map the SSM can represent
+    params, info = fit_trajectory(cfg, x, y, steps=30, batch=4, seed=0)
+    assert info["history"][-1][2] < info["history"][0][2]  # val MAE fell
+
+    ckpt = str(tmp_path / "ckpt")
+    save_trajectory(ckpt, cfg, [params, params], scale=info["scale"], step=3)
+    cfg2, members, scale, step = load_trajectory(ckpt)
+    assert cfg2 == cfg and len(members) == 2 and step == 3
+    assert scale == pytest.approx(info["scale"])
+    np.testing.assert_array_equal(
+        np.asarray(predict(members[0], cfg2, x)),
+        np.asarray(predict(params, cfg, x)))
+
+
+def test_load_trajectory_refuses_cnn_checkpoint(tmp_path):
+    from repro.surrogate.model import SurrogateConfig
+    from repro.surrogate.model import init_params as cnn_init
+    from repro.surrogate.train import save_surrogate
+    from repro.surrogate.trajectory import load_trajectory
+
+    scfg = SurrogateConfig(n_c=2, n_lstm=1, latent=8)
+    ckpt = str(tmp_path / "ckpt")
+    save_surrogate(ckpt, scfg, cnn_init(scfg, jax.random.key(0)))
+    with pytest.raises(ValueError, match="no trajectory meta"):
+        load_trajectory(ckpt)
+
+
+def test_fit_trajectory_shards_streams(tmp_path):
+    from repro.surrogate.dataset import save_shards
+    from repro.surrogate.trajectory import fit_trajectory_shards
+
+    cfg = TrajectoryConfig(latent=8, state=4, n_layers=1, obs_every=2)
+    x = waves(8, 16)
+    y = x[:, ::2] * 0.5
+    d = str(tmp_path / "shards")
+    save_shards(d, x, y, shard_size=2,
+                meta={"trajectories": True, "obs_every": 2})
+    params, info = fit_trajectory_shards(cfg, d, steps=8, batch=2, seed=0)
+    assert info["n_shards"] == 4
+    assert np.isfinite(info["val_mae"])
+
+
+def test_gradients_flow_through_assoc_scan(params):
+    x = waves(2, 16)
+    y = waves(2, 16, seed=1)
+    g = jax.grad(seqmodel.mae_loss)(params, CFG, jnp.asarray(x),
+                                    jnp.asarray(y))
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
