@@ -234,8 +234,12 @@ def main(argv=None):
     # Same waves, same backend, same compiled-chunk shape — only the solver
     # start vector (and preconditioner cadence) changes.  The claim measured:
     # strictly fewer cumulative CG iterations at a tolerance-equal trajectory.
-    cfg_warm = dataclasses.replace(cfg, warm_start=True)
-    cfg_lag = dataclasses.replace(cfg, warm_start=True,
+    # health=True: the guarded carry also counts non-converged CG steps per
+    # case — the warm-start claim is tolerance-EQUAL trajectories, so these
+    # cumulative counts belong in the record (0 means no step was silently
+    # served past tolerance; nonzero flags an iteration budget too tight).
+    cfg_warm = dataclasses.replace(cfg, warm_start=True, health=True)
+    cfg_lag = dataclasses.replace(cfg, warm_start=True, health=True,
                                   precond_every=args.precond_every)
     t0 = time.perf_counter()
     res_warm = run_campaign(mesh, cfg_warm, waves, observe=obs,
@@ -250,6 +254,9 @@ def main(argv=None):
         "iters_total_warm": int(res_warm.iters.sum()),
         "iters_total_warm_lagged": int(res_lag.iters.sum()),
         "iters_reduction_warm": 1.0 - res_warm.iters.sum() / max(1, iters_cold),
+        "nonconverged_steps_warm": int(res_warm.nonconverged.sum()),
+        "nonconverged_steps_warm_lagged": int(res_lag.nonconverged.sum()),
+        "diverged_cases_warm": [int(c) for c in res_warm.diverged_cases()],
         "precond_every": args.precond_every,
         "total_s_cold_start": camp_cold_s,
         "total_s_warm_start": warm_s,

@@ -71,6 +71,15 @@ def main() -> None:
     scheduler_bench.main(["--out", os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json")])
 
+    print("\n== Numerical-health guards: overhead vs guards-off ==")
+    from benchmarks import health_bench
+
+    # full fidelity (like kernels/scheduler): the committed BENCH_health
+    # .json pins the < 3 % guard-overhead budget on steady-state rounds —
+    # smoke sizes would measure dispatch, not the per-step guard cost
+    health_bench.main(["--out", os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_health.json")])
+
     print("\n== Serving tier: result cache + microbatching ==")
     from benchmarks import serving_bench
 

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import sys
 import zlib
 from typing import Any, NamedTuple, Optional
 
@@ -58,11 +59,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import health as health_mod
 from repro.core.stream import broadcast_kset, pad_kset
 from repro.fem import backend as fem_backend, methods
 from repro.parallel import distributed as dist
 from repro.parallel.sharding import shard_map
-from repro.training.checkpoint import CheckpointManager
+from repro.training.checkpoint import CheckpointCorruptError, CheckpointManager
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +117,19 @@ class CampaignResult(NamedTuple):
     """Global ``waves`` row of each returned case.  Single-process campaigns
     own everything (``arange(M)``); each process of a multi-host campaign
     gets only its owned slice, in global order."""
+    health: np.ndarray = np.zeros(0, np.int32)
+    """Per-returned-case health word (:mod:`repro.core.health` bitmask);
+    all zeros when every case stayed healthy.  Empty unless the campaign ran
+    with ``cfg.health`` guards enabled."""
+    nonconverged: np.ndarray = np.zeros(0, np.int64)
+    """Per-returned-case count of CG solves that hit ``maxiter`` above
+    tolerance.  Empty unless ``cfg.health`` guards were enabled."""
+
+    def diverged_cases(self) -> np.ndarray:
+        """Global wave rows of cases that tripped a fatal health bit."""
+        if len(self.health) == 0:
+            return np.zeros(0, np.int64)
+        return self.case_indices[np.asarray(health_mod.diverged(self.health))]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +229,10 @@ def _campaign_sig(campaign: "CampaignConfig", cfg, waves: np.ndarray, B: int, ob
         cfg.warm_start, cfg.precond_every, kernel_backend,
         np.asarray(obs).tolist(),
         zlib.crc32(np.ascontiguousarray(waves).tobytes()),
+        # appended only when enabled so pre-health checkpoints stay valid
+        # for unguarded runs; guards change the carry structure, so guarded
+        # and unguarded campaigns must never share a checkpoint
+        *(("health",) if cfg.health else ()),
     ))
     # every leaf masked to the positive int32 range: without x64, jax
     # downcasts restored int64 leaves to int32, which must not change the
@@ -235,7 +254,8 @@ def _round_ok_path(ckpt_dir: str, r: int) -> str:
 
 
 def _bank_round(
-    ckpt_dir: str, r: int, vel: np.ndarray, iters: np.ndarray, topo: CaseTopology
+    ckpt_dir: str, r: int, vel: np.ndarray, iters: np.ndarray, topo: CaseTopology,
+    health: Optional[np.ndarray] = None, nonconverged: Optional[np.ndarray] = None,
 ) -> None:
     """Persist one completed round atomically — banked rounds are immutable,
     so they are written exactly once instead of being re-serialized into
@@ -251,8 +271,11 @@ def _bank_round(
     os.makedirs(os.path.join(ckpt_dir, "rounds"), exist_ok=True)
     path = _round_path(ckpt_dir, r, topo)
     tmp = path + ".tmp"
+    extra = {}
+    if health is not None:
+        extra = {"health": health, "nonconverged": nonconverged}
     with open(tmp, "wb") as f:
-        np.savez(f, vel=vel, iters=iters)
+        np.savez(f, vel=vel, iters=iters, **extra)
     os.replace(tmp, path)
     if topo.process_count > 1:
         dist.barrier("bank_round")
@@ -265,7 +288,7 @@ def _bank_round(
 
 def _load_banked_round(
     ckpt_dir: str, r: int, r0: int, topo: CaseTopology
-) -> tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
     path = _round_path(ckpt_dir, r, topo)
     if topo.process_count > 1 and not os.path.exists(_round_ok_path(ckpt_dir, r)):
         raise ValueError(
@@ -279,7 +302,11 @@ def _load_banked_round(
             f"missing — checkpoint directory corrupt"
         )
     with np.load(path) as z:
-        return z["vel"], z["iters"]
+        return (
+            z["vel"], z["iters"],
+            z["health"] if "health" in z.files else None,
+            z["nonconverged"] if "nonconverged" in z.files else None,
+        )
 
 
 def make_campaign_chunk(
@@ -297,14 +324,26 @@ def make_campaign_chunk(
     ``(carry', (vel [B, ct, n_obs, 3], iters [B, ct]))``.  With a device
     mesh, the leading case axis is sharded via ``shard_map``; each device
     runs the identical program on its ``kset`` local members.
+
+    With ``ops.cfg.health`` the per-case step is wrapped by
+    :func:`repro.core.health.guard_step`: the carry becomes
+    ``(inner_carry, health_word, nonconverged)`` — all three checkpoint
+    together — and a case whose step goes non-finite is frozen by masked
+    arithmetic, so NaN cannot march forward in time (lanes of the vmap are
+    already independent of each other).
     """
     step, carry0 = methods.make_ensemble_step(ops, method)
+    guarded = bool(ops.cfg.health)
+    if guarded:
+        step = health_mod.guard_step(step)
+        carry0 = health_mod.initial_guard_carry(carry0)
     obs_idx = jnp.asarray(obs_idx)
 
     def chunk(carry, wave_chunk):
         def body(c, f_t):  # f_t: [B_local, 3]
             c, aux = jax.vmap(step)(c, f_t)
-            return c, (c[0].v[:, obs_idx], aux.iters)
+            nm = c[0][0] if guarded else c[0]
+            return c, (nm.v[:, obs_idx], aux.iters)
 
         carry, (vel, iters) = jax.lax.scan(
             body, carry, jnp.swapaxes(wave_chunk, 0, 1)
@@ -395,15 +434,20 @@ def run_campaign(
     # observations), so checkpoint volume stays O(round), not O(campaign).
     r0, t0 = 0, 0
     carry = carry0_b
-    done_rounds: list[tuple[np.ndarray, np.ndarray]] = []  # [(vel, iters)]
+    guarded = bool(cfg.health)
+    # [(vel, iters, health|None, nonconverged|None)] per completed round
+    done_rounds: list[tuple] = []
     cur_vel: list[np.ndarray] = []
     cur_iters: list[np.ndarray] = []
     resumed_from = None
     if mgr is not None:
         meta_like = {"meta": {"sig": sig, "round": np.zeros((), np.int64),
                               "t": np.zeros((), np.int64)}}
-        restored = mgr.restore_latest(meta_like)
-        if restored is not None:
+        bad_steps: set[int] = set()
+        while True:
+            restored = mgr.restore_latest(meta_like, skip=bad_steps)
+            if restored is None:
+                break
             ckpt_step, head = restored
             # verify the signature BEFORE restoring the carry: a mismatched
             # campaign must produce this error, not a pytree-structure one
@@ -413,11 +457,24 @@ def run_campaign(
                     f"different campaign (sig {np.asarray(head['meta']['sig'])} "
                     f"vs {sig}) — refusing to splice trajectories"
                 )
-            st = mgr.restore(ckpt_step, {
-                "carry": carry0_b,
-                "vel": np.zeros(()),     # structure-only (shape varies)
-                "iters": np.zeros(()),
-            })
+            try:
+                st = mgr.restore(ckpt_step, {
+                    "carry": carry0_b,
+                    "vel": np.zeros(()),     # structure-only (shape varies)
+                    "iters": np.zeros(()),
+                })
+            except CheckpointCorruptError as e:
+                # the meta head verified but a carry/obs leaf is corrupt —
+                # same degradation as restore_latest: lose one chunk, not
+                # the campaign
+                print(
+                    f"[checkpoint] step {ckpt_step} failed checksum "
+                    f"verification ({e}) — falling back to the previous "
+                    f"committed step",
+                    file=sys.stderr,
+                )
+                bad_steps.add(ckpt_step)
+                continue
             r0, t0 = int(head["meta"]["round"]), int(head["meta"]["t"])
             carry = st["carry"]
             for rr in range(r0):
@@ -428,6 +485,7 @@ def run_campaign(
                 cur_vel = [np.asarray(st["vel"])]
                 cur_iters = [np.asarray(st["iters"])]
             resumed_from = ckpt_step
+            break
 
     def _save(r_next: int, t_next: int, carry_next, blocking: bool = False):
         if mgr is None:
@@ -467,10 +525,18 @@ def run_campaign(
             if b == nt:  # round complete → bank it once, reset for the next
                 round_vel = np.concatenate(cur_vel, axis=1)
                 round_iters = np.concatenate(cur_iters, axis=1)
-                done_rounds.append((round_vel, round_iters))
+                if guarded:  # final guarded carry = (inner, word, ncg)
+                    round_health = np.asarray(jax.device_get(carry[1]), np.int32)
+                    round_ncg = np.asarray(jax.device_get(carry[2]), np.int64)
+                else:
+                    round_health = round_ncg = None
+                done_rounds.append(
+                    (round_vel, round_iters, round_health, round_ncg)
+                )
                 if mgr is not None:
                     _bank_round(
-                        campaign.checkpoint_dir, r, round_vel, round_iters, topo
+                        campaign.checkpoint_dir, r, round_vel, round_iters,
+                        topo, round_health, round_ncg,
                     )
                 cur_vel, cur_iters = [], []
                 completed = r + 1 == n_rounds
@@ -500,15 +566,32 @@ def run_campaign(
     )
     vmask = valid[ids]
     done_vel = (
-        np.stack([v for v, _ in done_rounds])
+        np.stack([v for v, _, _, _ in done_rounds])
         if nr_done
         else np.zeros((0, topo.local, nt, n_obs, 3), vdt)
     )
     done_iters = (
-        np.stack([it for _, it in done_rounds])
+        np.stack([it for _, it, _, _ in done_rounds])
         if nr_done
         else np.zeros((0, topo.local, nt), np.int64)
     )
+    if guarded:
+        # a pre-health banked round (health=None) cannot appear here: the
+        # health knob is folded into the campaign signature, so resuming a
+        # guarded campaign over unguarded rounds refuses before this point
+        done_health = (
+            np.stack([h for _, _, h, _ in done_rounds])
+            if nr_done else np.zeros((0, topo.local), np.int32)
+        )
+        done_ncg = (
+            np.stack([c for _, _, _, c in done_rounds])
+            if nr_done else np.zeros((0, topo.local), np.int64)
+        )
+        health_flat = done_health.reshape(nr_done * topo.local)[vmask]
+        ncg_flat = done_ncg.reshape(nr_done * topo.local)[vmask]
+    else:
+        health_flat = np.zeros(0, np.int32)
+        ncg_flat = np.zeros(0, np.int64)
     return CampaignResult(
         velocity_history=done_vel.reshape(nr_done * topo.local, nt, n_obs, 3)[vmask],
         iters=done_iters.reshape(nr_done * topo.local, nt)[vmask],
@@ -517,4 +600,6 @@ def run_campaign(
         completed=completed,
         resumed_from=resumed_from,
         case_indices=ids[vmask],
+        health=health_flat,
+        nonconverged=ncg_flat,
     )

@@ -1,4 +1,4 @@
 # The paper's primary contribution: heterogeneous memory management as a
 # composable library — host-resident partitioned state, double-buffered
 # streaming (Algorithm 3), and its NN-training offload applications.
-from repro.core import hetmem, offload, pipeline, stream  # noqa: F401
+from repro.core import faults, health, hetmem, offload, pipeline, stream  # noqa: F401

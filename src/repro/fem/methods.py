@@ -50,6 +50,10 @@ class SeismicConfig:
     # ---- solver amortization ----------------------------------------------
     warm_start: bool = False  # carry δu as x0 for the next step's CG solve
     precond_every: int = 1    # EBE: refresh the block-Jacobi diag every N steps
+    # ---- numerical health (core/health.py) --------------------------------
+    health: bool = False      # per-case health word + masked freeze of
+    #                           diverged cases (signature-bearing: guarded and
+    #                           unguarded campaigns never share checkpoints)
 
     def __post_init__(self):
         if self.precond_every < 1:
@@ -67,6 +71,10 @@ class SeismicConfig:
 class StepAux(NamedTuple):
     iters: jnp.ndarray
     relres: jnp.ndarray
+    converged: jnp.ndarray | bool = True
+    """CG exit status (:class:`repro.fem.solver.CGResult.converged`):
+    False when the solve hit ``maxiter`` above tolerance or went
+    non-finite — the signal the health layer folds into its per-case word."""
 
 
 def _material_tables(mesh, cfg):
@@ -336,7 +344,7 @@ def make_step_crs(ops: FemOperators, *, transfer_boundaries: bool = False,
         else:
             alpha, beta_e = ops.damping_coeffs(springs)
         tail = (res.x,) if cfg.warm_start else ()
-        return (nm, springs, D_new, alpha, beta_e, *tail), StepAux(res.iters, res.relres)
+        return (nm, springs, D_new, alpha, beta_e, *tail), StepAux(res.iters, res.relres, res.converged)
 
     return step
 
@@ -401,7 +409,7 @@ def make_step_ebe(ops: FemOperators, *, streamed: bool = True, offload: bool = T
         tail = (res.x,) if cfg.warm_start else ()
         if lag:
             tail += (Minv, tstep + 1)
-        return (nm, springs, D_new, alpha, beta_e, *tail), StepAux(res.iters, res.relres)
+        return (nm, springs, D_new, alpha, beta_e, *tail), StepAux(res.iters, res.relres, res.converged)
 
     return step
 

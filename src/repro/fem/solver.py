@@ -21,6 +21,11 @@ class CGResult(NamedTuple):
     x: jnp.ndarray
     iters: jnp.ndarray
     relres: jnp.ndarray
+    converged: jnp.ndarray | bool = True
+    """``relres ≤ tol`` at loop exit.  False means the solve hit ``maxiter``
+    still above tolerance — previously indistinguishable from success — or
+    went non-finite (NaN compares False, so a diverged solve reports
+    unconverged, which is what the health layer keys on)."""
 
 
 def _vdot(a, b):
@@ -74,7 +79,8 @@ def pcg(
         return (x, r, p, rz_new, it + 1)
 
     x, r, p, rz, it = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.zeros((), jnp.int32)))
-    return CGResult(x=x, iters=it, relres=jnp.sqrt(_vdot(r, r)) / bnorm)
+    relres = jnp.sqrt(_vdot(r, r)) / bnorm
+    return CGResult(x=x, iters=it, relres=relres, converged=relres <= tol)
 
 
 def fcg(
@@ -112,7 +118,8 @@ def fcg(
         return (x, r_new, p, z_new, it + 1)
 
     x, r, p, z, it = jax.lax.while_loop(cond, body, (x, r, p, z, jnp.zeros((), jnp.int32)))
-    return CGResult(x=x, iters=it, relres=jnp.sqrt(_vdot(r, r)) / bnorm)
+    relres = jnp.sqrt(_vdot(r, r)) / bnorm
+    return CGResult(x=x, iters=it, relres=relres, converged=relres <= tol)
 
 
 def make_inner_pcg_preconditioner(

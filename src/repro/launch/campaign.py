@@ -122,6 +122,23 @@ Flags
     Fault injection: the CI kill-and-resume smoke uses it to exit cleanly
     right after a mid-campaign checkpoint, exactly as a SIGKILL at that
     point would leave the directory.
+``--health / --no-health``
+    Per-case numerical-health guards (``repro.core.health``, default on):
+    every case carries a sticky health word through the Newmark scan; a
+    case whose carry, spring state, or solver output goes non-finite is
+    *frozen* in place (masked arithmetic — sibling cases in the same vmap
+    round are untouched, bit-identically), excluded from shard output, and
+    recorded as a quarantine entry in the shard manifest (plain path) or
+    the plan manifest (sweeps — where the elastic scheduler additionally
+    requeues the group once with a tighter-tolerance fallback config).
+    The flag is signature-bearing: guarded and unguarded campaigns never
+    share checkpoints.
+``--inject``
+    Deterministic fault injection (``repro.core.faults``) for chaos
+    rehearsal, e.g. ``--inject nan_at_step=5,case=1`` poisons one bedrock
+    wave sample so the health machinery above has something to catch.
+    Plain campaign path only; the spec is part of the wave data and hence
+    the campaign signature.
 """
 import argparse
 import os
@@ -207,6 +224,16 @@ def main(argv=None):
                     help="with --trajectories: record every Nth time step")
     ap.add_argument("--stop-after-steps", type=int, default=None,
                     help="fault injection: exit after this many global steps")
+    ap.add_argument("--health", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="per-case numerical-health guards (repro.core."
+                         "health): freeze diverged cases, exclude them from "
+                         "shards, record them in the quarantine manifest")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault injection (repro.core.faults): "
+                         "e.g. 'nan_at_step=5,case=1' poisons one bedrock "
+                         "wave sample mid-campaign (plain campaign path "
+                         "only) — the chaos-smoke rehearsal knob")
     # multi-host topology (parsed pre-jax-import by parse_distributed; kept
     # here so --help documents them and argparse accepts them)
     ap.add_argument("--coordinator", default=None,
@@ -247,6 +274,10 @@ def main(argv=None):
         if args.trajectories:
             raise SystemExit(f"{tag} --trajectories rides the plain campaign "
                              f"path; drop --scenario/--sweep/--scenarios")
+        if args.inject:
+            raise SystemExit(f"{tag} --inject rides the plain campaign path "
+                             f"(scenario sweeps generate their own waves); "
+                             f"drop --scenario/--sweep/--scenarios")
         return _run_scenarios(args, tag, np_, dmesh)
 
     cfg = EnsembleConfig(
@@ -264,11 +295,22 @@ def main(argv=None):
     from repro.surrogate.dataset import random_band_limited_waves, simulation_config
 
     sim = simulation_config(cfg, **_sim_knobs(args))
+    if args.health:
+        import dataclasses as _dc
+
+        sim = _dc.replace(sim, health=True)
     kb = fem_backend.resolve(sim)
     print(f"{tag} kernel backend: {kb.describe()} "
-          f"warm_start={sim.warm_start} precond_every={sim.precond_every}")
+          f"warm_start={sim.warm_start} precond_every={sim.precond_every} "
+          f"health={sim.health}")
     mesh = meshgen.generate(*cfg.mesh_n, pad_elems_to=8)
     waves = random_band_limited_waves(cfg)
+    from repro.core import faults
+
+    inject = faults.parse(args.inject)
+    if inject is not None:
+        waves = faults.apply_wave_fault(inject, waves)
+        print(f"{tag} [inject] {inject.describe()}")
     obs = mesh.surface[len(mesh.surface) // 2 : len(mesh.surface) // 2 + 1]
     res = run_campaign(
         mesh, sim, waves, observe=obs,
@@ -292,6 +334,21 @@ def main(argv=None):
     print(f"{tag} [done] {len(y)} responses"
           + (f" (cases {res.case_indices.min()}–{res.case_indices.max()} of "
              f"{args.waves})" if np_ > 1 and len(y) else "") + stats)
+    diverged = np.zeros(0, np.int64)
+    keep = np.ones(len(y), bool)
+    if res.health.size:
+        from repro.core import health as health_mod
+
+        diverged = res.diverged_cases()
+        keep = ~np.asarray(health_mod.diverged(res.health))
+        print(f"{tag} [health] {len(res.health)} case(s) guarded, "
+              f"{diverged.size} diverged, "
+              f"{int(res.nonconverged.sum())} non-converged solver step(s)")
+        for c in diverged:
+            i = int(np.argwhere(res.case_indices == c)[0, 0])
+            print(f"{tag} [quarantine] case {int(c)}: "
+                  f"{health_mod.describe(res.health[i])} — excluded from "
+                  f"shard output")
     if args.out:
         out_dir = args.out if np_ == 1 else f"{args.out}/p{pid:02d}"
         y_out, meta = y, None
@@ -300,9 +357,13 @@ def main(argv=None):
             # the wave stays full-rate (seqmodel strides it at train time)
             y_out = y[:, ::args.obs_every]
             meta = {"trajectories": True, "obs_every": args.obs_every}
+        if diverged.size:  # quarantine record rides the shard manifest
+            meta = {**(meta or {}),
+                    "quarantine": [int(c) for c in diverged]}
         paths = save_shards(
-            out_dir, waves[res.case_indices].astype(np.float32),
-            y_out.astype(np.float32), shard_size=args.shard_size, meta=meta,
+            out_dir, waves[res.case_indices[keep]].astype(np.float32),
+            y_out[keep].astype(np.float32), shard_size=args.shard_size,
+            meta=meta,
         )
         kind = (f"trajectory (obs_every={args.obs_every}) "
                 if args.trajectories else "")
@@ -362,7 +423,7 @@ def _run_scenarios(args, tag, np_, dmesh) -> int:
         return _run_scheduled(args, tag, plan, dmesh)
     run = sc.run_plan(
         plan, autotune=args.autotune, probe=args.probe,
-        method=args.method, kset=args.kset,
+        method=args.method, kset=args.kset, health=args.health,
         calibration=args.calibration, **_sim_knobs(args),
         device_mesh=dmesh, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         out_dir=args.out, shard_size=args.shard_size,
@@ -388,7 +449,7 @@ def _group_knobs(args) -> dict:
     return dict(
         autotune=args.autotune, probe=args.probe,
         method=args.method, kset=args.kset, calibration=args.calibration,
-        ckpt_every=args.ckpt_every, **_sim_knobs(args),
+        ckpt_every=args.ckpt_every, health=args.health, **_sim_knobs(args),
     )
 
 
@@ -406,6 +467,7 @@ def _worker_cmd(args, worker: str) -> list:
            "--precond-every", str(args.precond_every),
            "--shard-size", str(args.shard_size)]
     cmd += ["--warm-start"] if args.warm_start else ["--no-warm-start"]
+    cmd += ["--health"] if args.health else ["--no-health"]
     for flag, val in (("--sweep", args.sweep), ("--scenario", args.scenario),
                       ("--scenarios", args.scenarios),
                       ("--ebe-backend", args.ebe_backend),
@@ -450,7 +512,7 @@ def _run_scheduled(args, tag, plan, dmesh) -> int:
         )
         print(f"{tag} [worker {s.worker}] done={len(s.done)} "
               f"failed={len(s.failed)} preempted={len(s.preempted)} "
-              f"settled={s.settled}"
+              f"quarantined={len(s.quarantined)} settled={s.settled}"
               + (f" DEAD groups: {s.dead}" if s.dead else ""))
         return 1 if s.dead else 0
 

@@ -28,6 +28,13 @@ new data-generation sweep (the active-learning loop).
 
 The KV-offload decode path is Algorithm 3 with the layer-group attention
 as the streamed kernel, now engine-internal (`serving/engine.DecodeEngine`).
+
+Reliability knobs (docs/serving.md "Reliability"): ``--deadline-ms`` fails
+stale requests instead of batching them, ``--breaker-threshold`` /
+``--breaker-cooldown-s`` arm the consecutive-failure circuit breaker, and
+``--inject fail_infer_every_n=N,limit=K`` deterministically rehearses the
+whole degradation path (split-retry isolation, breaker trip and heal) —
+the CI chaos-smoke's serving leg.
 """
 import argparse
 import os
@@ -71,6 +78,22 @@ def _build_parser():
     ap.add_argument("--repeat", type=int, default=1,
                     help="submit the workload this many times (round ≥ 2 "
                          "demonstrates cache hits)")
+    # reliability knobs (docs/serving.md "Reliability")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: a request older than this at "
+                         "flush time fails with DeadlineExceededError")
+    ap.add_argument("--breaker-threshold", type=int, default=0,
+                    help="consecutive engine failures that open the circuit "
+                         "breaker (0 disables)")
+    ap.add_argument("--breaker-cooldown-s", type=float, default=1.0,
+                    help="seconds the open breaker rejects requests before "
+                         "its half-open probe")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault injection (repro.core.faults): "
+                         "'fail_infer_every_n=N[,limit=K]' wraps the engine "
+                         "so every Nth infer raises (at most K times) — the "
+                         "chaos-smoke rehearsal knob for the breaker/"
+                         "split-retry machinery")
     ap.add_argument("--shard", action="store_true",
                     help="shard the batch axis over all devices "
                          "(ShardedEngine on the case mesh)")
@@ -109,6 +132,13 @@ def _stack(args, engine):
     if args.shard:
         engine = ShardedEngine(engine)
         print(f"[serve] sharding batch axis over {engine.n_devices} device(s)")
+    from repro.core import faults
+
+    inject = faults.parse(args.inject)
+    if inject is not None:
+        engine = faults.wrap_engine(inject, engine)
+        print(f"[serve] [inject] {inject.describe()} — "
+              f"signature={engine.signature()}")
     engine.warmup()
     cache = ResultCache(args.cache_size) if args.cache_size > 0 else None
     feedback = (
@@ -118,6 +148,9 @@ def _stack(args, engine):
     batcher = MicroBatcher(
         engine, max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
         cache=cache, feedback=feedback,
+        deadline_ms=args.deadline_ms,
+        breaker_threshold=args.breaker_threshold,
+        breaker_cooldown_s=args.breaker_cooldown_s,
     )
     return batcher, cache, feedback
 
@@ -131,6 +164,14 @@ def _report(batcher, cache, feedback):
     print(f"[serve] wait mean={st['wait_ms_mean']:.2f}ms "
           f"max={st['wait_ms_max']:.2f}ms  "
           f"infer mean={st['infer_ms_mean']:.1f}ms/batch")
+    print(f"[serve] health: engine_failures={st['engine_failures']} "
+          f"split_retries={st['split_retries']} "
+          f"poison_requests={st['poison_requests']} "
+          f"nonfinite_outputs={st['nonfinite_outputs']} "
+          f"deadline_expired={st['deadline_expired']} "
+          f"breaker_trips={st['breaker_trips']} "
+          f"breaker_rejected={st['breaker_rejected']} "
+          f"breaker_state={st['breaker_state']}")
     if cache is not None:
         cs = cache.stats()
         print(f"[serve] cache: {cs['size']}/{cs['capacity']} entries, "
@@ -179,10 +220,24 @@ def _serve_surrogate(args) -> int:
                 for s in scenarios
             ]
             for s, f in futs:
-                r = f.result()
+                # a failed request degrades (prints) instead of killing the
+                # serving loop — poison isolation / breaker rehearsal path
+                try:
+                    r = f.result()
+                except Exception as e:  # noqa: BLE001
+                    print(f"[serve] round {rnd + 1} {s.name}: FAILED "
+                          f"({type(e).__name__}: {e})")
+                    continue
                 src = "cache" if r.cached else f"compute {r.infer_ms:.1f}ms"
                 print(f"[serve] round {rnd + 1} {s.name}: "
                       f"y{tuple(r.y.shape)} score={r.score:.3f} [{src}]")
+            if batcher.stats()["breaker_state"] == "open":
+                import time as _time
+
+                print(f"[serve] circuit breaker open — waiting "
+                      f"{batcher.breaker_cooldown_s:.1f}s cooldown before "
+                      f"next round")
+                _time.sleep(batcher.breaker_cooldown_s + 0.05)
         _report(batcher, cache, feedback)
 
     if feedback is not None and feedback.stats()["routed"] > 0:

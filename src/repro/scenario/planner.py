@@ -322,6 +322,7 @@ def run_group(
     tile_p: int = 256,
     warm_start: bool = False,
     precond_every: int = 1,
+    health: bool = True,
     calibration=None,
     device_mesh=None,
     ckpt_dir: Optional[str] = None,
@@ -344,6 +345,12 @@ def run_group(
     shards land in ``out_dir/<scenario>/`` committed atomically by
     ``save_shards``.  ``stats["completed"]`` is False when
     ``stop_after_steps`` checkpoint-stopped the campaign mid-group.
+
+    ``health=True`` (default) runs the campaign with the per-case health
+    word (:mod:`repro.core.health`): diverged cases are frozen in-flight,
+    **excluded from shard output**, and recorded in
+    ``stats["health"]["diverged"]`` — the planner manifest's quarantine
+    record, which the elastic scheduler's quarantine round consumes.
     """
     from repro.campaign import CampaignConfig, run_campaign
     from repro.scenario import autotune as _autotune
@@ -370,6 +377,8 @@ def run_group(
         group.choice = _autotune.TuneChoice(method=method, npart=npart, kset=kset)
     ch = group.choice
     sim = ref.sim_config(npart=ch.npart, tol=tol, maxiter=maxiter, **knobs)
+    if health:
+        sim = dataclasses.replace(sim, health=True)
     log(f"{label or 'group'} [{group.key[:8]}]: "
         f"{len(group.scenarios)} scenario(s), {group.n_cases} case(s), "
         f"method={ch.method} npart={ch.npart} kset={ch.kset} ({ch.source})")
@@ -395,9 +404,24 @@ def run_group(
         log(f"{label or 'group'} [{group.key[:8]}]: stopped after "
             f"{res.steps_done} steps — relaunch to resume")
         return {}, stats
+    diverged = np.asarray(
+        res.diverged_cases() if health else [], np.int64)
+    if health:
+        stats["health"] = {
+            "guarded": True,
+            "diverged": [int(c) for c in diverged],
+            "nonconverged_steps": int(res.nonconverged.sum())
+            if res.nonconverged.size else 0,
+        }
+        if diverged.size:
+            log(f"{label or 'group'} [{group.key[:8]}] [quarantine]: "
+                f"{diverged.size} diverged case(s) "
+                f"{[int(c) for c in diverged]} — excluded from shard output")
     results: dict[str, ScenarioResult] = {}
     for s, (lo, hi) in zip(group.scenarios, group.case_slices()):
         local = (res.case_indices >= lo) & (res.case_indices < hi)
+        if diverged.size:  # diverged cases never reach shards
+            local &= ~np.isin(res.case_indices, diverged)
         sr = ScenarioResult(
             scenario=s,
             waves=waves[res.case_indices[local]],

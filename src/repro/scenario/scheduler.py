@@ -164,13 +164,25 @@ class JobQueue:
 
     def _spent(self, fail_paths: list[str]) -> int:
         """Fail records that count toward :attr:`SchedulerConfig.
-        max_attempts`: errors and lease expiries.  ``preempted``
-        checkpoint-stops are excluded — each one advanced a valid
-        checkpoint, so a ``--stop-after-steps`` run (or a repeatedly
+        max_attempts`: errors, lease expiries, and quarantine requeues.
+        ``preempted`` checkpoint-stops are excluded — each one advanced a
+        valid checkpoint, so a ``--stop-after-steps`` run (or a repeatedly
         preempted worker pool) may need arbitrarily many resume cycles
         and must never be declared dead for it."""
         return sum(1 for p in fail_paths
                    if (self._read(p) or {}).get("kind") != "preempted")
+
+    def quarantine_record(self, key: str) -> Optional[dict]:
+        """The quarantine fail record for ``key``, if a prior attempt
+        requeued it over diverged cases — its presence is what bounds the
+        quarantine machinery to ONE fallback round: a retry that still
+        diverges commits its healthy cases and records the survivors
+        instead of requeuing again."""
+        for p in self.fail_paths(key):
+            rec = self._read(p) or {}
+            if rec.get("kind") == "quarantine":
+                return rec
+        return None
 
     # -- queue construction --------------------------------------------------
 
@@ -356,7 +368,8 @@ class JobQueue:
             if rec:
                 out[g.key] = {k: rec[k] for k in
                               ("completed", "wall_s", "cases_per_s",
-                               "mean_iters", "worker", "attempt") if k in rec}
+                               "mean_iters", "worker", "attempt",
+                               "health", "quarantine") if k in rec}
                 if rec.get("choice") and g.choice is None:
                     from repro.scenario.autotune import TuneChoice
 
@@ -387,6 +400,8 @@ class WorkerSummary:
     preempted: list[str]           # group keys checkpoint-stopped + requeued
     settled: bool                  # whole queue settled when this worker left
     dead: list[str]                # group keys exhausted (queue-wide)
+    quarantined: list[str] = dataclasses.field(default_factory=list)
+    # group keys this worker requeued for a fallback-config quarantine round
 
 
 def queue_dir_for(ckpt_dir: Optional[str], out_dir: Optional[str]) -> str:
@@ -552,12 +567,23 @@ def run_worker(
         _beat(q, worker, claim.key, len(summary.done))
         label = f"worker {worker} group {gi + 1}/{len(plan.groups)} " \
                 f"(attempt {claim.attempt})"
+        # quarantine round: a prior attempt completed but left diverged
+        # cases — this retry runs the fallback config it recorded
+        run_kw = dict(group_kw)
+        qrec = q.quarantine_record(claim.key)
+        if qrec is not None and run_kw.get("health", True):
+            fb_tol = float(qrec.get("fallback_tol") or 0.0)
+            if fb_tol > 0:
+                run_kw["tol"] = fb_tol
+            log(f"{label}: quarantine round for diverged case(s) "
+                f"{qrec.get('diverged', [])} — fallback tol="
+                f"{run_kw.get('tol', 1e-6):g}")
         try:
             group_results, st = runner(
                 group, device_mesh=device_mesh, ckpt_dir=ckpt_dir,
                 out_dir=os.path.join(stage_root) if out_dir else None,
                 shard_size=shard_size, stop_after_steps=stop_after_steps,
-                prior=prior, log=log, label=label, **group_kw,
+                prior=prior, log=log, label=label, **run_kw,
             )
         except Exception as e:  # noqa: BLE001 — record, requeue, move on
             stop.set()
@@ -591,6 +617,45 @@ def run_worker(
             flush_manifest()
             break
 
+        diverged = list((st.get("health") or {}).get("diverged") or [])
+        if diverged and qrec is None:
+            # first completion with diverged cases: discard this attempt's
+            # staged output and checkpoints (the fallback config changes the
+            # campaign signature, which would refuse the stale checkpoints)
+            # and requeue exactly ONE quarantine round with a tighter tol.
+            # The quarantine record both carries the fallback config and —
+            # by its presence — bounds the machinery to a single round.
+            fb_tol = float(run_kw.get("tol", 1e-6)) * 0.1
+            for name in group_results:
+                shutil.rmtree(os.path.join(stage_root, name),
+                              ignore_errors=True)
+            if ckpt_dir:
+                shutil.rmtree(os.path.join(ckpt_dir, f"group_{claim.key}"),
+                              ignore_errors=True)
+            q.release(claim.key, claim.token, fail={
+                "kind": "quarantine", "worker": worker,
+                "error": f"{len(diverged)} diverged case(s): {diverged}",
+                "diverged": diverged, "fallback_tol": fb_tol,
+                **({"choice": dataclasses.asdict(group.choice)}
+                   if group.choice is not None else {}),
+            })
+            summary.quarantined.append(claim.key)
+            log(f"{label} [quarantine]: {len(diverged)} diverged case(s) "
+                f"{diverged} — requeued once with fallback tol={fb_tol:g}")
+            flush_manifest()
+            continue
+        if diverged:
+            # the fallback round still diverged: commit the healthy cases
+            # (run_group already excluded the diverged ones from shards) and
+            # record the survivors — no further retries.
+            st = dict(st)
+            st["quarantine"] = {
+                "round": "fallback", "diverged": diverged,
+                "fallback_tol": run_kw.get("tol", 1e-6),
+            }
+            log(f"{label} [quarantine]: fallback round still has "
+                f"{len(diverged)} diverged case(s) {diverged} — committing "
+                f"healthy cases only")
         if lost.is_set():
             log(f"{label}: lease was taken over mid-run — publishing anyway "
                 f"(first rename wins) ")

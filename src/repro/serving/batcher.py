@@ -23,9 +23,26 @@ or the accelerator.  A :class:`repro.serving.feedback.FeedbackLog` observes
 every computed request's uncertainty score and routes high-scoring
 scenarios back to the campaign planner.
 
+Reliability (the numerical-health layer's serving half):
+
+* **per-request deadlines** — a request older than its deadline at flush
+  time fails with :class:`DeadlineExceededError` instead of occupying a
+  batch slot its caller has already given up on;
+* **split-retry isolation** — when a batch's engine call raises, the
+  batch bisects and retries each half, recursively, until the poison
+  request fails *alone* with the original error while every coalesced
+  neighbor still gets its result;
+* **non-finite output detection** — a request whose output rows contain
+  NaN/Inf fails with :class:`NonFiniteOutputError` (and is never cached
+  or fed back) instead of serving garbage;
+* **circuit breaker** — ``breaker_threshold`` consecutive engine failures
+  open the breaker: flushes fail fast with :class:`CircuitOpenError`
+  without touching the engine for ``breaker_cooldown_s``, then one
+  half-open probe either closes it or re-opens it.
+
 Per-request latency is accounted in three phases — queue wait, batch
 compute, total — surfaced by :meth:`MicroBatcher.stats` next to the cache
-hit/miss/eviction counters.
+hit/miss/eviction counters and the health counters above.
 """
 from __future__ import annotations
 
@@ -39,6 +56,19 @@ from typing import Any, Optional
 import numpy as np
 
 
+class DeadlineExceededError(TimeoutError):
+    """The request's deadline passed before its batch flushed."""
+
+
+class NonFiniteOutputError(RuntimeError):
+    """The engine returned NaN/Inf rows for this request."""
+
+
+class CircuitOpenError(RuntimeError):
+    """The circuit breaker is open: the engine has failed
+    ``breaker_threshold`` consecutive times and is cooling down."""
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request: a cache ``key`` + input rows ``x [n, ...]``.
@@ -46,6 +76,8 @@ class Request:
     ``meta`` travels untouched to the feedback log (the surrogate serving
     path puts the :class:`~repro.scenario.catalog.Scenario` here so
     high-uncertainty requests can be routed back to the planner).
+    ``deadline`` is an absolute ``time.monotonic()`` instant (None → no
+    deadline).
     """
 
     key: str
@@ -54,6 +86,7 @@ class Request:
     t_submit: float = 0.0
     t_flush: float = 0.0
     future: Optional[Future] = None
+    deadline: Optional[float] = None
 
     @property
     def n(self) -> int:
@@ -76,6 +109,11 @@ class MicroBatcher:
 
     ``queue_depth`` bounds the submit queue — a saturated server applies
     backpressure at ``submit`` (blocks) rather than growing without bound.
+
+    ``deadline_ms`` is the default per-request deadline (None → none);
+    ``breaker_threshold`` consecutive engine failures trip the circuit
+    breaker (0 disables it); ``nonfinite_check`` fails requests whose
+    output rows are non-finite.
     """
 
     def __init__(
@@ -87,16 +125,28 @@ class MicroBatcher:
         queue_depth: int = 256,
         cache=None,
         feedback=None,
+        deadline_ms: Optional[float] = None,
+        breaker_threshold: int = 0,
+        breaker_cooldown_s: float = 1.0,
+        nonfinite_check: bool = True,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
         if max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be ≥ 0, got {max_wait_ms}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if breaker_threshold < 0:
+            raise ValueError(f"breaker_threshold must be ≥ 0, got {breaker_threshold}")
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.cache = cache
         self.feedback = feedback
+        self.deadline_s = None if deadline_ms is None else float(deadline_ms) / 1e3
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.nonfinite_check = bool(nonfinite_check)
         self._q: "queue.Queue[Optional[Request]]" = queue.Queue(maxsize=queue_depth)
         self._lock = threading.Lock()
         self._stats = {
@@ -104,7 +154,18 @@ class MicroBatcher:
             "flush_full": 0, "flush_timeout": 0, "flush_drain": 0,
             "cache_hits": 0,
             "wait_ms_sum": 0.0, "infer_ms_sum": 0.0, "wait_ms_max": 0.0,
+            # -- health counters --------------------------------------------
+            "engine_failures": 0,     # engine.infer exceptions observed
+            "split_retries": 0,       # failed batches bisected for isolation
+            "poison_requests": 0,     # requests failed alone after isolation
+            "nonfinite_outputs": 0,   # requests refused on NaN/Inf outputs
+            "deadline_expired": 0,    # requests failed on their deadline
+            "breaker_trips": 0,       # closed/half-open → open transitions
+            "breaker_rejected": 0,    # requests failed fast while open
         }
+        # circuit breaker: consecutive engine failures; open until t
+        self._consec_failures = 0
+        self._open_until: Optional[float] = None
         self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -113,11 +174,15 @@ class MicroBatcher:
     def _cache_key(self, key: str) -> tuple:
         return (self.engine.signature(), key)
 
-    def submit(self, key: str, x, meta: Any = None) -> Future:
+    def submit(
+        self, key: str, x, meta: Any = None,
+        deadline_ms: Optional[float] = None,
+    ) -> Future:
         """Enqueue one request; returns a future of :class:`ServedResult`.
 
         The result cache is consulted *here*, on the caller thread: a hit
         never enqueues, never batches, never touches the accelerator.
+        ``deadline_ms`` overrides the batcher default for this request.
         """
         if self._closed:
             raise RuntimeError("batcher is closed")
@@ -130,8 +195,11 @@ class MicroBatcher:
                     self._stats["cache_hits"] += 1
                 fut.set_result(dataclasses.replace(hit, cached=True))
                 return fut
-        req = Request(key=key, x=np.asarray(x), meta=meta,
-                      t_submit=time.monotonic(), future=fut)
+        dl_s = (float(deadline_ms) / 1e3 if deadline_ms is not None
+                else self.deadline_s)
+        now = time.monotonic()
+        req = Request(key=key, x=np.asarray(x), meta=meta, t_submit=now,
+                      future=fut, deadline=None if dl_s is None else now + dl_s)
         if req.x.ndim < 1 or req.n < 1:
             raise ValueError(f"request x must be [n≥1, ...], got {req.x.shape}")
         self._q.put(req)
@@ -153,9 +221,26 @@ class MicroBatcher:
                 self._flush(pending, "timeout")
                 pending, rows = [], 0
                 continue
-            if req is None:  # close sentinel: drain and exit
-                if pending:
-                    self._flush(pending, "drain")
+            if req is None:  # close sentinel: drain everything and exit
+                # requests enqueued concurrently with close() can land
+                # *behind* the sentinel — drain past it so no future is
+                # ever abandoned unresolved (callers would hang forever)
+                while True:
+                    try:
+                        extra = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if extra is not None:
+                        pending.append(extra)
+                group: list[Request] = []
+                grows = 0
+                for r in pending:
+                    if group and grows + r.n > self.max_batch:
+                        self._flush(group, "drain")
+                        group, grows = [], 0
+                    group.append(r)
+                    grows += r.n
+                self._flush(group, "drain")
                 return
             pending.append(req)
             rows += req.n
@@ -163,19 +248,84 @@ class MicroBatcher:
                 self._flush(pending, "full")
                 pending, rows = [], 0
 
+    # -- circuit breaker (call with self._lock held) -------------------------
+    def _breaker_state_locked(self, now: float) -> str:
+        if self.breaker_threshold <= 0 or self._open_until is None:
+            return "closed"
+        return "open" if now < self._open_until else "half_open"
+
+    def _record_engine_failure_locked(self, now: float) -> None:
+        self._stats["engine_failures"] += 1
+        self._consec_failures += 1
+        tripped = (
+            self.breaker_threshold > 0
+            and self._consec_failures >= self.breaker_threshold
+        )
+        reopened = self._breaker_state_locked(now) == "half_open"
+        if tripped or reopened:
+            self._open_until = now + self.breaker_cooldown_s
+            self._stats["breaker_trips"] += 1
+
+    def _record_engine_success_locked(self) -> None:
+        self._consec_failures = 0
+        self._open_until = None  # half-open probe succeeded → closed
+
     def _flush(self, pending: list[Request], reason: str) -> None:
         if not pending:
             return
         t0 = time.monotonic()
+        # expired requests fail here instead of occupying batch slots
+        live = []
+        for r in pending:
+            if r.deadline is not None and t0 > r.deadline:
+                with self._lock:
+                    self._stats["deadline_expired"] += 1
+                r.future.set_exception(DeadlineExceededError(
+                    f"request {r.key!r} expired "
+                    f"{(t0 - r.deadline) * 1e3:.1f} ms past its deadline "
+                    f"before its batch flushed"
+                ))
+            else:
+                live.append(r)
+        pending = live
+        if not pending:
+            return
+        with self._lock:
+            state = self._breaker_state_locked(t0)
+            if state == "open":
+                self._stats["breaker_rejected"] += len(pending)
+        if state == "open":
+            err = CircuitOpenError(
+                f"circuit breaker open after {self._consec_failures} "
+                f"consecutive engine failure(s); cooling down"
+            )
+            for r in pending:
+                r.future.set_exception(err)
+            return
         try:
             xb = np.concatenate([r.x for r in pending], axis=0)
             res = self.engine.infer(xb)
-        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
-            for r in pending:
-                r.future.set_exception(e)
+        except Exception as e:  # noqa: BLE001 — fail requests, not the loop
+            with self._lock:
+                self._record_engine_failure_locked(time.monotonic())
+            if len(pending) == 1:
+                # isolation floor: the poison request fails alone, with
+                # the engine's original error
+                with self._lock:
+                    self._stats["poison_requests"] += 1
+                pending[0].future.set_exception(e)
+                return
+            # split-retry: bisect so a poison request cannot take its
+            # coalesced neighbors down with it
+            with self._lock:
+                self._stats["split_retries"] += 1
+            mid = len(pending) // 2
+            self._flush(pending[:mid], reason)
+            self._flush(pending[mid:], reason)
             return
         infer_ms = (time.monotonic() - t0) * 1e3
         with self._lock:
+            self._record_engine_success_locked()
             st = self._stats
             st["batches"] += 1
             st[f"flush_{reason}"] += 1
@@ -192,6 +342,14 @@ class MicroBatcher:
             with self._lock:
                 self._stats["wait_ms_sum"] += wait_ms
                 self._stats["wait_ms_max"] = max(self._stats["wait_ms_max"], wait_ms)
+            if self.nonfinite_check and not np.isfinite(y).all():
+                with self._lock:
+                    self._stats["nonfinite_outputs"] += 1
+                r.future.set_exception(NonFiniteOutputError(
+                    f"engine returned non-finite output rows for request "
+                    f"{r.key!r} — refusing to serve (or cache) garbage"
+                ))
+                continue
             out = ServedResult(y=y, score=score, cached=False,
                                wait_ms=wait_ms, infer_ms=infer_ms)
             if self.cache is not None:
@@ -205,6 +363,7 @@ class MicroBatcher:
         """Counter snapshot (+ cache counters when a cache is attached)."""
         with self._lock:
             st = dict(self._stats)
+            st["breaker_state"] = self._breaker_state_locked(time.monotonic())
         served = max(1, st["requests"] - st["cache_hits"])
         st["wait_ms_mean"] = st["wait_ms_sum"] / served
         st["infer_ms_mean"] = st["infer_ms_sum"] / max(1, st["batches"])

@@ -17,10 +17,23 @@ import json
 import os
 import re
 import time
+import zlib
 from typing import Iterator, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+
+class ShardIntegrityError(RuntimeError):
+    """A shard file's bytes no longer match the checksum its index
+    committed — the dataset is corrupt and must be regenerated, not
+    silently trained on."""
+
+
+class NonFinitePayloadError(ValueError):
+    """Refusal to commit NaN/Inf rows into dataset shards.  Diverged cases
+    must be excluded (see :mod:`repro.core.health` and the campaign's
+    quarantine records) before :func:`save_shards`."""
 
 from repro.campaign import CampaignConfig, run_campaign
 from repro.fem import meshgen, methods
@@ -148,9 +161,26 @@ def save_shards(
     back by :func:`shard_meta`) — trajectory harvests record
     ``{"trajectories": True, "obs_every": k}`` so a trainer can refuse a
     stride mismatch instead of silently learning the wrong alignment.
-    Reserved keys (``n``/``nt``/``shards``) cannot be overridden."""
+    Reserved keys (``n``/``nt``/``shards``/``checksums``) cannot be
+    overridden.
+
+    Integrity: non-finite payload rows are refused
+    (:class:`NonFinitePayloadError` — a NaN that reaches here escaped the
+    health layer's quarantine and must not be trained on), and the index
+    records a per-shard checksum that every reader verifies
+    (:class:`ShardIntegrityError` on mismatch)."""
     if len(x) != len(y):
         raise ValueError(f"waves/responses length mismatch: {len(x)} vs {len(y)}")
+    for name, arr in (("x", x), ("y", y)):
+        arr = np.asarray(arr)
+        flat = arr.reshape(len(arr), -1) if len(arr) else arr
+        if len(arr) and not np.isfinite(flat).all():
+            bad = np.unique(np.argwhere(~np.isfinite(flat))[:, 0])
+            raise NonFinitePayloadError(
+                f"refusing to commit non-finite {name} rows "
+                f"{bad[:8].tolist()} to {directory} — exclude diverged "
+                f"cases (repro.core.health) before save_shards"
+            )
     os.makedirs(directory, exist_ok=True)
     index = os.path.join(directory, "index.json")
     if os.path.exists(index):
@@ -163,10 +193,15 @@ def save_shards(
         np.savez(p, x=x[lo : lo + shard_size], y=y[lo : lo + shard_size])
         paths.append(p)
     record = dict(meta or {})
-    overlap = {"n", "nt", "shards"} & set(record)
+    overlap = {"n", "nt", "shards", "checksums"} & set(record)
     if overlap:
         raise ValueError(f"meta may not override reserved index keys {sorted(overlap)}")
-    record.update({"n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths)})
+    record.update({
+        "n": int(len(x)), "nt": int(x.shape[1]), "shards": len(paths),
+        "checksums": {
+            os.path.basename(p): _file_crc(p) for p in paths
+        },
+    })
     tmp = index + ".tmp"
     with open(tmp, "w") as f:
         json.dump(record, f)
@@ -280,7 +315,32 @@ def shard_paths(directory: str) -> list[str]:
     raise FileNotFoundError(f"no dataset shards under {directory}")
 
 
+def _file_crc(path: str) -> int:
+    with open(path, "rb") as f:
+        return zlib.crc32(f.read()) & 0xFFFFFFFF
+
+
+def _expected_crc(path: str) -> Optional[int]:
+    """The committed checksum for a shard file, from its directory's index
+    (None for pre-checksum indexes — nothing to verify against)."""
+    index = os.path.join(os.path.dirname(path), "index.json")
+    try:
+        with open(index) as f:
+            return (json.load(f).get("checksums") or {}).get(
+                os.path.basename(path)
+            )
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
 def _load_shard(path: str) -> tuple[np.ndarray, np.ndarray]:
+    want = _expected_crc(path)
+    if want is not None and _file_crc(path) != want:
+        raise ShardIntegrityError(
+            f"shard {path} does not match the checksum its index committed "
+            f"— the file was modified or corrupted after save_shards; "
+            f"regenerate the dataset"
+        )
     with np.load(path) as z:
         return z["x"], z["y"]
 

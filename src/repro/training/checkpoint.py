@@ -39,11 +39,28 @@ import json
 import os
 import re
 import shutil
+import sys
 import threading
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint leaf file fails its manifest checksum.
+
+    Raised by :meth:`CheckpointManager.restore`; :meth:`CheckpointManager.
+    restore_latest` catches it and falls back to the previous committed
+    step instead — bit rot (or a byte-flipping filesystem) costs one
+    checkpoint interval, never a deserialized-garbage resume."""
+
+
+def _crc(path: str) -> int:
+    with open(path, "rb") as f:
+        return zlib.crc32(f.read()) & 0xFFFFFFFF
+
 
 _STEP_DIR = re.compile(r"^step_(\d+)$")
 _SHARD_DIR = re.compile(r"^step_(\d+)\.p(\d+)$")
@@ -135,7 +152,9 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest: dict[str, Any] = {"step": step, "meta": meta, "leaves": {}}
+        manifest: dict[str, Any] = {
+            "step": step, "meta": meta, "leaves": {}, "checksums": {},
+        }
         if self.sharded:
             manifest["process_index"] = self.process_index
             manifest["process_count"] = self.process_count
@@ -144,8 +163,14 @@ class CheckpointManager:
             os.makedirs(sub)
             manifest["leaves"][name] = []
             for i, (key, arr) in enumerate(sorted(leaves.items())):
-                np.save(os.path.join(sub, f"{i:05d}.npy"), arr)
+                fn = f"{i:05d}.npy"
+                np.save(os.path.join(sub, fn), arr)
                 manifest["leaves"][name].append(key)
+                # commit the written bytes' checksum: restore refuses a leaf
+                # whose on-disk bytes no longer hash to what was saved
+                manifest["checksums"][f"{name}/{fn}"] = _crc(
+                    os.path.join(sub, fn)
+                )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -260,16 +285,24 @@ class CheckpointManager:
         self,
         like: dict[str, Any],
         shardings: Optional[dict[str, Any]] = None,
+        skip: Optional[set] = None,
     ) -> Optional[tuple[int, dict[str, Any]]]:
         """``(step, state)`` from the newest *valid* checkpoint, or ``None``
         if the directory holds none — the resume-or-start-fresh idiom shared
         by the training launcher and the campaign runner.
 
         A torn single-process step (directory without a readable manifest —
-        e.g. pre-atomic debris) is skipped in favor of the next older step.
-        A world-size mismatch, a committed step with a missing shard, or
-        shards disagreeing on ``meta`` raise: those are operator errors a
-        silent fresh start (or older restore) would hide.
+        e.g. pre-atomic debris) and a step whose leaf files fail their
+        manifest checksums (:class:`CheckpointCorruptError` — bit rot, a
+        byte-flipping filesystem, a hand-edited directory) are skipped in
+        favor of the next older step.  A world-size mismatch, a committed
+        step with a missing shard, or shards disagreeing on ``meta`` raise:
+        those are operator errors a silent fresh start (or older restore)
+        would hide.
+
+        ``skip`` excludes steps a caller already found corrupt when
+        restoring a *different* subset of the state than ``like`` covers
+        (the campaign runner restores the meta head first, then the carry).
         """
         committed = self._committed_steps()
         legacy = self._legacy_steps()
@@ -280,14 +313,24 @@ class CheckpointManager:
                 f"on a mismatched world size"
             )
         for step in sorted(committed | legacy, reverse=True):
-            if step in committed:
-                self._validate_sharded(step)
+            if skip and step in skip:
+                continue
+            try:
+                if step in committed:
+                    self._validate_sharded(step)
+                    return step, self.restore(step, like, shardings=shardings)
+                if self.sharded:
+                    continue  # orphan legacy dir below a committed step
+                if self._read_manifest(os.path.join(self.directory, f"step_{step:09d}")) is None:
+                    continue  # torn step: fall back to the previous one
                 return step, self.restore(step, like, shardings=shardings)
-            if self.sharded:
-                continue  # orphan legacy dir below a committed step
-            if self._read_manifest(os.path.join(self.directory, f"step_{step:09d}")) is None:
-                continue  # torn step: fall back to the previous one
-            return step, self.restore(step, like, shardings=shardings)
+            except CheckpointCorruptError as e:
+                print(
+                    f"[checkpoint] step {step} failed checksum verification "
+                    f"({e}) — falling back to the previous committed step",
+                    file=sys.stderr,
+                )
+                continue
         return None
 
     def restore(
@@ -311,6 +354,8 @@ class CheckpointManager:
             path = os.path.join(self.directory, f"step_{step:09d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
+        # manifests written before checksum support verify nothing (empty)
+        checksums = manifest.get("checksums") or {}
         out = {}
         for name, tree in like.items():
             keys = manifest["leaves"][name]
@@ -319,7 +364,16 @@ class CheckpointManager:
             assert sorted(paths) == sorted(keys), f"{name}: leaf mismatch"
             loaded = {}
             for i, key in enumerate(sorted(keys)):
-                loaded[key] = np.load(os.path.join(path, name, f"{i:05d}.npy"))
+                fn = f"{name}/{i:05d}.npy"
+                fpath = os.path.join(path, name, f"{i:05d}.npy")
+                want = checksums.get(fn)
+                if want is not None and _crc(fpath) != want:
+                    raise CheckpointCorruptError(
+                        f"checkpoint leaf {fn} of step {step} in "
+                        f"{self.directory} does not match its manifest "
+                        f"checksum — refusing to deserialize corrupt data"
+                    )
+                loaded[key] = np.load(fpath)
             leaves = [loaded[p] for p in paths]
             if shardings and name in shardings:
                 sflat = jax.tree_util.tree_flatten(shardings[name])[0]

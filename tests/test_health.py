@@ -1,0 +1,550 @@
+"""Numerical-health subsystem + deterministic fault injection.
+
+The robustness contracts:
+
+* a NaN injected into one case's forcing **cannot spread**: the poisoned
+  case trips its sticky health word and is frozen by masked arithmetic,
+  while its vmap siblings stay bit-identical to an uninjected run;
+* diverged cases are excluded from shard output and recorded as a
+  quarantine entry (shard meta / plan manifest); the elastic scheduler
+  requeues a diverged group exactly ONCE with a fallback config;
+* checkpoints and dataset shards carry per-file checksums: a flipped
+  byte is a *named* refusal (``CheckpointCorruptError`` /
+  ``ShardIntegrityError``), with ``restore_latest`` falling back to the
+  previous committed step; ``save_shards`` refuses non-finite payloads;
+* the serving batcher degrades per-request: deadlines, split-retry
+  poison isolation, non-finite-output refusal, and a consecutive-failure
+  circuit breaker that trips and heals — and ``close()`` resolves every
+  future, even for requests that land behind the close sentinel;
+* kill-and-resume stays bit-identical with the guards on.
+"""
+import dataclasses
+import json
+import os
+import time
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, health
+from repro.fem import meshgen, methods, solver
+
+NT = 8
+
+
+@pytest.fixture(scope="module")
+def x64():
+    with jax.enable_x64(True):
+        yield
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return meshgen.generate(2, 2, 2, pad_elems_to=4)
+
+
+def _waves(M, nt=NT, seed=0):
+    rng = np.random.default_rng(seed)
+    w = np.zeros((M, nt, 3))
+    w[:, :, 0] = 0.3 * rng.normal(size=(M, nt))
+    return w
+
+
+def _cfg(**kw):
+    kw.setdefault("dt", 0.01)
+    kw.setdefault("tol", 1e-8)
+    kw.setdefault("maxiter", 600)
+    kw.setdefault("npart", 2)
+    kw.setdefault("nspring", 12)
+    return methods.SeismicConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# health word primitives
+# ---------------------------------------------------------------------------
+
+
+def test_health_word_bits_and_describe():
+    w = health.init_word()
+    assert int(w) == 0 and bool(health.is_live(w)) and not bool(health.diverged(w))
+    w = w | health.BIT_SOLVER_NONFINITE | health.BIT_NONCONVERGED
+    assert bool(health.diverged(w)) and not bool(health.is_live(w))
+    assert health.describe(w) == "solver_nonfinite+nonconverged"
+    assert health.describe(health.init_word()) == "healthy"
+    # NONCONVERGED alone is informational, not fatal
+    assert bool(health.is_live(jnp.int32(health.BIT_NONCONVERGED)))
+
+
+def test_finite_all_and_freeze():
+    tree = {"a": jnp.ones(3), "i": jnp.arange(3)}  # int leaves ignored
+    assert bool(health.finite_all(tree))
+    bad = {"a": jnp.array([1.0, jnp.nan, 3.0]), "i": jnp.arange(3)}
+    assert not bool(health.finite_all(bad))
+    frozen = health.freeze(jnp.array(False), bad, tree)
+    np.testing.assert_array_equal(np.asarray(frozen["a"]), np.ones(3))
+    live = health.freeze(jnp.array(True), bad, tree)
+    assert np.isnan(np.asarray(live["a"][1]))
+
+
+def test_cg_converged_flag(mesh, x64):
+    """CGResult.converged == (relres ≤ tol): satisfied solves report True,
+    an iteration-starved solve reports False (satellite b bugfix)."""
+    from repro.fem import backend as fem_backend
+
+    ops = fem_backend.make_operators(mesh, _cfg())
+    step, carry = methods.make_ensemble_step(ops, "proposed2")
+    f = jnp.asarray(_waves(1)[0, 0], ops.cfg.rdtype)
+    _, aux = step(carry, f)
+    assert bool(aux.converged) and float(aux.relres) <= _cfg().tol
+    ops1 = fem_backend.make_operators(mesh, _cfg(maxiter=1, tol=1e-14))
+    step1, carry1 = methods.make_ensemble_step(ops1, "proposed2")
+    _, aux1 = step1(carry1, f)
+    assert not bool(aux1.converged)
+
+
+# ---------------------------------------------------------------------------
+# fault-spec grammar + injectors
+# ---------------------------------------------------------------------------
+
+
+def test_faults_parse_grammar():
+    s = faults.parse("nan_at_step=5,case=1")
+    assert s.kind == "nan_at_step" and s.value == 5 and s.get("case") == 1
+    assert faults.parse(None) is None and faults.parse("") is None
+    assert faults.parse("fail_infer_every_n=2,limit=3").get("limit") == 3
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.parse("meteor_strike=1")
+    with pytest.raises(ValueError):
+        faults.parse("nan_at_step")  # missing =value
+
+
+def test_nan_at_step_bounds_and_purity():
+    w = _waves(3)
+    out = faults.nan_at_step(w, 2, case=1)
+    assert np.isfinite(w).all()                     # input untouched
+    assert np.isnan(out[1, 2]).all() and np.isfinite(out[0]).all()
+    with pytest.raises(ValueError):
+        faults.nan_at_step(w, NT + 7)
+    with pytest.raises(ValueError):
+        faults.nan_at_step(w, 0, case=99)
+
+
+def test_corrupt_shard_byte_roundtrip(tmp_path):
+    p = str(tmp_path / "blob.bin")
+    with open(p, "wb") as f:
+        f.write(bytes(range(16)))
+    pos = faults.corrupt_shard_byte(p, offset=3, xor=0xFF)
+    data = open(p, "rb").read()
+    assert pos == 3 and data[3] == 3 ^ 0xFF and data[0] == 0
+    faults.corrupt_shard_byte(p, offset=3, xor=0xFF)  # XOR is its own inverse
+    assert open(p, "rb").read() == bytes(range(16))
+
+
+def test_faulty_engine_schedule_and_signature():
+    class Ok:
+        def warmup(self):
+            pass
+
+        def signature(self):
+            return "ok-v1"
+
+        def infer(self, x):
+            return x
+
+    eng = faults.wrap_engine(faults.parse("fail_infer_every_n=2,limit=1"), Ok())
+    assert "+fault:fail_infer_every_n=2,limit=1" in eng.signature()
+    assert eng.infer(1) == 1                        # call 1: passes
+    with pytest.raises(RuntimeError, match="injected engine failure"):
+        eng.infer(2)                                # call 2: fails
+    assert eng.infer(3) == 3 and eng.infer(4) == 4  # limit=1 exhausted
+    with pytest.raises(ValueError):
+        faults.wrap_engine(faults.parse("nan_at_step=1"), Ok())
+    with pytest.raises(ValueError):
+        faults.apply_wave_fault(
+            faults.parse("fail_infer_every_n=1"), _waves(1))
+
+
+# ---------------------------------------------------------------------------
+# NaN contagion: the tentpole regression (satellite c)
+# ---------------------------------------------------------------------------
+
+
+def test_nan_injection_quarantines_without_contagion(mesh, x64):
+    """A NaN in case 1's forcing trips its health word and freezes it;
+    cases 0 and 2 are bit-identical to an uninjected guarded run, and the
+    guarded clean run is bit-identical to the unguarded one."""
+    from repro.campaign import CampaignConfig, run_campaign
+
+    waves = _waves(3)
+    poisoned = faults.nan_at_step(waves, 3, case=1)
+    obs = mesh.surface[:1]
+    cc = CampaignConfig(kset=3, method="proposed2", seed=0)
+
+    cfg_g = _cfg(health=True)
+    clean = run_campaign(mesh, cfg_g, waves, observe=obs, campaign=cc)
+    bad = run_campaign(mesh, cfg_g, poisoned, observe=obs, campaign=cc)
+    plain = run_campaign(mesh, _cfg(), waves, observe=obs, campaign=cc)
+
+    assert clean.health.shape == (3,) and not clean.diverged_cases().size
+    np.testing.assert_array_equal(  # guards on ≡ guards off when healthy
+        np.asarray(clean.velocity_history), np.asarray(plain.velocity_history))
+    assert list(bad.diverged_cases()) == [1]
+    assert health.describe(bad.health[1]) != "healthy"
+    for sib in (0, 2):              # sibling lanes: bit-identical
+        np.testing.assert_array_equal(
+            np.asarray(bad.velocity_history[sib]),
+            np.asarray(clean.velocity_history[sib]))
+    # the frozen case's recorded output is still finite (no NaN leaks out)
+    assert np.isfinite(np.asarray(bad.velocity_history)).all()
+    # the NaN forcing surfaces through the solver: relres goes NaN, which
+    # both trips the fatal bit and latches the (sticky) nonconverged bit
+    assert "solver_nonfinite" in health.describe(bad.health[1])
+
+
+def test_guarded_kill_and_resume_bit_identity(tmp_path, mesh, x64):
+    """The health word rides the scan carry → checkpoints capture it; a
+    killed-and-resumed guarded campaign equals the straight-through run."""
+    from repro.campaign import CampaignConfig, run_campaign
+
+    waves = faults.nan_at_step(_waves(4), 2, case=2)
+    obs = mesh.surface[:1]
+    cfg = _cfg(health=True)
+
+    def cc(d):
+        return CampaignConfig(kset=2, method="proposed2", seed=0,
+                              checkpoint_dir=d, checkpoint_every=3)
+
+    ref = run_campaign(mesh, cfg, waves, observe=obs,
+                       campaign=CampaignConfig(kset=2, method="proposed2"))
+    d = str(tmp_path / "ck")
+    part = run_campaign(mesh, cfg, waves, observe=obs, campaign=cc(d),
+                        stop_after_steps=5)
+    assert not part.completed
+    full = run_campaign(mesh, cfg, waves, observe=obs, campaign=cc(d))
+    assert full.completed and full.resumed_from is not None
+    np.testing.assert_array_equal(np.asarray(full.velocity_history),
+                                  np.asarray(ref.velocity_history))
+    np.testing.assert_array_equal(full.health, ref.health)
+    assert list(full.diverged_cases()) == [2]
+
+
+def test_campaign_resumes_past_corrupt_checkpoint(tmp_path, mesh, x64, capsys):
+    """A flipped byte in the newest checkpoint costs one chunk, not the
+    campaign: the resume falls back to the previous committed step and the
+    finished trajectory is still bit-identical to a straight run."""
+    import glob
+
+    from repro.campaign import CampaignConfig, run_campaign
+
+    waves = _waves(4)
+    obs = mesh.surface[:1]
+    cfg = _cfg(health=True)
+
+    def cc(d):
+        return CampaignConfig(kset=2, method="proposed2", seed=0,
+                              checkpoint_dir=d, checkpoint_every=3)
+
+    ref = run_campaign(mesh, cfg, waves, observe=obs,
+                       campaign=CampaignConfig(kset=2, method="proposed2"))
+    d = str(tmp_path / "ck")
+    part = run_campaign(mesh, cfg, waves, observe=obs, campaign=cc(d),
+                        stop_after_steps=5)
+    assert not part.completed
+    steps = sorted(glob.glob(os.path.join(d, "step_*")))
+    assert len(steps) >= 2
+    leaf = sorted(glob.glob(os.path.join(steps[-1], "carry", "*.npy")))[0]
+    faults.corrupt_shard_byte(leaf, offset=-8)
+    full = run_campaign(mesh, cfg, waves, observe=obs, campaign=cc(d))
+    newest = max(int(os.path.basename(s).split("_")[1]) for s in steps)
+    assert full.completed and full.resumed_from < newest
+    assert "falling back" in capsys.readouterr().err
+    np.testing.assert_array_equal(np.asarray(full.velocity_history),
+                                  np.asarray(ref.velocity_history))
+
+
+def test_run_group_excludes_diverged_from_shards(tmp_path, monkeypatch, x64):
+    """Planner integration: the diverged case is absent from the committed
+    shards but present in the manifest's quarantine record."""
+    from repro import scenario as sc
+    from repro.scenario.planner import run_group, write_manifest
+    from repro.surrogate.dataset import load_shards
+
+    scn = sc.Scenario(name="hq", n_cases=3, nt=NT, mesh_n=(2, 2, 2))
+    plan = sc.make_plan([scn])
+    orig = sc.Scenario.waves
+
+    def poisoned(self):
+        return faults.nan_at_step(orig(self), 3, case=1)
+
+    monkeypatch.setattr(sc.Scenario, "waves", poisoned)
+    out = str(tmp_path / "shards")
+    results, st = run_group(plan.groups[0], out_dir=out, log=print)
+    assert st["health"]["diverged"] == [1]
+    x, y = load_shards(os.path.join(out, "hq"))
+    assert len(x) == 2 and np.isfinite(y).all()     # case 1 excluded
+    mpath = write_manifest(plan, str(tmp_path / "plan.json"),
+                           {plan.groups[0].key: st})
+    m = json.load(open(mpath))
+    assert m["groups"][0]["health"]["diverged"] == [1]
+
+
+# ---------------------------------------------------------------------------
+# scheduler quarantine round
+# ---------------------------------------------------------------------------
+
+
+def _tiny_plan():
+    from repro import scenario as sc
+
+    base = sc.Scenario(mesh_n=(2, 2, 2), n_cases=2, nt=6)
+    return sc.make_plan(sc.SweepSpec(
+        base=base, axes=(("soil.vs", ((0.8, 1.0), (1.0, 1.0))),)))
+
+
+def test_scheduler_quarantines_once_with_fallback_config(tmp_path):
+    """Attempt 1 completes with a diverged case → requeued once as a
+    quarantine round; attempt 2 sees the tighter fallback tol and its
+    clean completion marks the group done."""
+    from repro.scenario.scheduler import JobQueue, SchedulerConfig, run_worker
+
+    plan = _tiny_plan()
+    g0 = plan.groups[0].key
+    seen = {}
+
+    def runner(group, **kw):
+        n = seen[group.key] = seen.get(group.key, 0) + 1
+        st = {"completed": True, "wall_s": 0.01, "cases_per_s": 1.0,
+              "mean_iters": 1.0, "health": {"guarded": True, "diverged": [],
+                                            "nonconverged_steps": 0}}
+        if group.key == g0 and n == 1:
+            st["health"]["diverged"] = [1]
+        if n == 2:
+            assert kw.get("tol") == pytest.approx(1e-7)  # fallback config
+        return {}, st
+
+    fast = SchedulerConfig(lease_s=30.0, poll_s=0.02, backoff_s=0.01)
+    s = run_worker(plan, worker="w0", scheduler=fast,
+                   ckpt_dir=str(tmp_path / "ck"), _group_runner=runner)
+    assert s.settled and not s.dead and s.quarantined == [g0]
+    assert sorted(s.done) == sorted(g.key for g in plan.groups)
+    q = JobQueue(os.path.join(str(tmp_path / "ck"), "queue"), fast)
+    rec = q.quarantine_record(g0)
+    assert rec is not None and rec["diverged"] == [1]
+    assert rec["fallback_tol"] == pytest.approx(1e-7)
+    assert seen[g0] == 2
+
+
+def test_scheduler_quarantine_is_bounded_to_one_round(tmp_path):
+    """A group that still diverges on its fallback round commits the
+    healthy cases and records the survivors — no infinite requeue loop."""
+    from repro.scenario.scheduler import JobQueue, SchedulerConfig, run_worker
+
+    plan = _tiny_plan()
+    calls = {}
+
+    def runner(group, **kw):
+        calls[group.key] = calls.get(group.key, 0) + 1
+        return {}, {"completed": True, "wall_s": 0.01, "cases_per_s": 1.0,
+                    "mean_iters": 1.0,
+                    "health": {"guarded": True, "diverged": [0],
+                               "nonconverged_steps": 3}}
+
+    fast = SchedulerConfig(lease_s=30.0, poll_s=0.02, backoff_s=0.01)
+    s = run_worker(plan, worker="w0", scheduler=fast,
+                   ckpt_dir=str(tmp_path / "ck"), _group_runner=runner)
+    assert s.settled and not s.dead
+    assert all(calls[g.key] == 2 for g in plan.groups)  # exactly one retry
+    with open(os.path.join(str(tmp_path / "ck"), "plan.json")) as f:
+        m = json.load(f)
+    for g in m["groups"]:
+        assert g["completed"] and g["quarantine"]["diverged"] == [0]
+        assert g["quarantine"]["round"] == "fallback"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / shard integrity
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_checksum_refuses_and_falls_back(tmp_path, capsys):
+    from repro.training.checkpoint import CheckpointCorruptError, CheckpointManager
+
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d)
+    like = {"params": {"w": np.zeros(4)}}
+    mgr.save(1, {"params": {"w": np.full(4, 1.0)}}, blocking=True)
+    mgr.save(2, {"params": {"w": np.full(4, 2.0)}}, blocking=True)
+    leaf = os.path.join(d, "step_000000002", "params", "00000.npy")
+    faults.corrupt_shard_byte(leaf, offset=-1)
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
+        mgr.restore(2, like)
+    step, st = mgr.restore_latest(like)             # falls back, warns
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(st["params"]["w"]), 1.0)
+    assert "falling back" in capsys.readouterr().err
+
+
+def test_shard_checksum_refusal_and_nonfinite_payload(tmp_path):
+    from repro.surrogate.dataset import (
+        NonFinitePayloadError, ShardIntegrityError, load_shards, save_shards,
+    )
+
+    x = np.random.default_rng(0).standard_normal((4, NT, 3)).astype(np.float32)
+    y = (2 * x).astype(np.float32)
+    d = str(tmp_path / "sh")
+    paths = save_shards(d, x, y, shard_size=2)
+    faults.corrupt_shard_byte(paths[0], offset=-1)
+    with pytest.raises(ShardIntegrityError, match="checksum"):
+        load_shards(d)
+    faults.corrupt_shard_byte(paths[0], offset=-1)  # un-flip: loads again
+    xs, ys = load_shards(d)
+    np.testing.assert_array_equal(xs, x)
+    # a legacy index without checksums still loads (verifies nothing)
+    idx = json.load(open(os.path.join(d, "index.json")))
+    del idx["checksums"]
+    json.dump(idx, open(os.path.join(d, "index.json"), "w"))
+    load_shards(d)
+    # non-finite payloads are refused before anything is committed
+    y_bad = y.copy()
+    y_bad[1, 0, 0] = np.inf
+    with pytest.raises(NonFinitePayloadError, match="case"):
+        save_shards(str(tmp_path / "bad"), x, y_bad, shard_size=2)
+    assert not os.path.exists(os.path.join(str(tmp_path / "bad"), "index.json"))
+
+
+# ---------------------------------------------------------------------------
+# serving degradation
+# ---------------------------------------------------------------------------
+
+from repro.serving import InferResult, MicroBatcher  # noqa: E402
+from repro.serving.batcher import (  # noqa: E402
+    CircuitOpenError, DeadlineExceededError, NonFiniteOutputError, Request,
+)
+
+
+class Doubler:
+    def __init__(self, delay_s=0.0, poison=None, fail_until=0):
+        self.calls = 0
+        self.delay_s = delay_s
+        self.poison = poison          # raise if this value appears in x
+        self.fail_until = fail_until  # raise unconditionally for N calls
+
+    def warmup(self):
+        pass
+
+    def signature(self):
+        return "doubler-v1"
+
+    def infer(self, x):
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        x = np.asarray(x)
+        if self.fail_until and self.calls <= self.fail_until:
+            raise RuntimeError(f"down (call {self.calls})")
+        if self.poison is not None and (x == self.poison).any():
+            raise RuntimeError("poison row")
+        return InferResult(y=2.0 * x, score=x.reshape(x.shape[0], -1).max(1))
+
+
+def _x(v, n=1):
+    return np.full((n, 4), float(v), np.float32)
+
+
+def test_close_sentinel_does_not_abandon_requests():
+    """Satellite a regression: a request that lands in the queue *behind*
+    the close sentinel must still be flushed, not abandoned with its
+    future forever unresolved."""
+    eng = Doubler(delay_s=0.25)
+    mb = MicroBatcher(eng, max_batch=1, max_wait_ms=1.0)
+    first = mb.submit("r0", _x(1))           # occupies the loop for 0.25 s
+    time.sleep(0.05)                         # loop is now inside _flush
+    mb._q.put(None)                          # close sentinel...
+    late = Future()
+    mb._q.put(Request(key="late", x=_x(3), t_submit=time.monotonic(),
+                      future=late))          # ...with a request BEHIND it
+    mb._thread.join(timeout=5.0)
+    assert not mb._thread.is_alive()
+    np.testing.assert_array_equal(first.result(timeout=1).y, _x(2))
+    np.testing.assert_array_equal(late.result(timeout=1).y, _x(6))
+    mb.close()
+
+
+def test_deadline_expires_stale_request():
+    eng = Doubler(delay_s=0.2)
+    with MicroBatcher(eng, max_batch=1, max_wait_ms=1.0) as mb:
+        slow = mb.submit("s", _x(1))         # holds the loop for 0.2 s
+        stale = mb.submit("t", _x(2), deadline_ms=50.0)
+        with pytest.raises(DeadlineExceededError, match="expired"):
+            stale.result(timeout=2)
+        slow.result(timeout=2)
+        assert mb.stats()["deadline_expired"] == 1
+    assert eng.calls == 1                    # expired request never inferred
+
+
+def test_split_retry_isolates_poison_request():
+    """One poison request in a coalesced batch fails alone with the
+    engine's original error; every neighbor still gets its result."""
+    eng = Doubler(poison=666.0)
+    with MicroBatcher(eng, max_batch=5, max_wait_ms=2000.0) as mb:
+        futs = [mb.submit(f"r{i}", _x(i)) for i in (1, 2, 3, 4)]
+        bad = mb.submit("poison", _x(666))   # 5 pending rows → flush-on-full
+        for i, f in zip((1, 2, 3, 4), futs):
+            np.testing.assert_array_equal(f.result(timeout=2).y, _x(2 * i))
+        with pytest.raises(RuntimeError, match="poison row"):
+            bad.result(timeout=2)
+        st = mb.stats()
+    assert st["poison_requests"] == 1 and st["split_retries"] >= 1
+    assert st["engine_failures"] >= 1 and st["breaker_trips"] == 0
+
+
+def test_nonfinite_output_fails_only_that_request():
+    eng = Doubler()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=2000.0) as mb:
+        good = mb.submit("g", _x(1))
+        nan = mb.submit("n", np.full((3, 4), np.nan, np.float32))
+        np.testing.assert_array_equal(good.result(timeout=2).y, _x(2))
+        with pytest.raises(NonFiniteOutputError, match="non-finite"):
+            nan.result(timeout=2)
+        assert mb.stats()["nonfinite_outputs"] == 1
+        # and the refused result was never cached / fed back
+        assert mb.cache is None
+
+
+def test_circuit_breaker_trips_and_heals():
+    eng = Doubler(fail_until=2)
+    with MicroBatcher(eng, max_batch=1, max_wait_ms=1.0,
+                      breaker_threshold=2, breaker_cooldown_s=0.15) as mb:
+        for i in range(2):                   # two consecutive failures: trip
+            with pytest.raises(RuntimeError, match="down"):
+                mb.submit(f"f{i}", _x(i)).result(timeout=2)
+        assert mb.stats()["breaker_state"] == "open"
+        with pytest.raises(CircuitOpenError):  # fail-fast, engine untouched
+            mb.submit("rejected", _x(9)).result(timeout=2)
+        assert eng.calls == 2
+        time.sleep(0.2)                      # cooldown elapses → half-open
+        ok = mb.submit("probe", _x(5)).result(timeout=2)
+        np.testing.assert_array_equal(ok.y, _x(10))
+        st = mb.stats()
+    assert st["breaker_state"] == "closed" and st["breaker_trips"] == 1
+    assert st["breaker_rejected"] == 1 and st["engine_failures"] == 2
+
+
+def test_breaker_reopens_on_failed_probe():
+    eng = Doubler(fail_until=3)
+    with MicroBatcher(eng, max_batch=1, max_wait_ms=1.0,
+                      breaker_threshold=2, breaker_cooldown_s=0.1) as mb:
+        for i in range(2):
+            with pytest.raises(RuntimeError):
+                mb.submit(f"f{i}", _x(i)).result(timeout=2)
+        time.sleep(0.15)
+        with pytest.raises(RuntimeError):    # half-open probe fails
+            mb.submit("probe", _x(7)).result(timeout=2)
+        assert mb.stats()["breaker_state"] == "open"   # re-opened
+        assert mb.stats()["breaker_trips"] == 2
+        time.sleep(0.15)
+        mb.submit("heal", _x(5)).result(timeout=2)
+    assert eng.calls == 4
